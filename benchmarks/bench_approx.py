@@ -1,0 +1,35 @@
+"""Fig. 15 — approximate solution: overall ratio (OR), recall, time vs p,
+on Normal and Uniform (the paper's approximate-eval datasets)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, dataset, overall_ratio, recall, timeit
+
+
+def run(scale: float = 0.05) -> list[Row]:
+    rows = []
+    k = 20
+    for name in ("normal", "uniform"):
+        spec, data, queries = dataset(name, scale)
+        idx = build_index(data, spec.measure, m=8, kmeans_iters=4)
+        exact = search.knn_batch(idx, queries, k)
+        for p in (0.7, 0.8, 0.9):
+            res = search.knn_batch(idx, queries, k, approx_p=p)
+            us = timeit(lambda: search.knn_batch(idx, queries, k,
+                                                 approx_p=p), repeats=3)
+            ors, recs = [], []
+            for i in range(len(queries)):
+                ors.append(overall_ratio(res.dists[i], exact.dists[i]))
+                recs.append(recall(res.ids[i], exact.ids[i]))
+            cand = float(np.mean(np.asarray(res.num_candidates)))
+            rows.append(Row(
+                "fig15_approx", f"{name}/p={p}", us / len(queries),
+                {"overall_ratio": round(float(np.mean(ors)), 4),
+                 "recall": round(float(np.mean(recs)), 3),
+                 "candidates": round(cand, 1)}))
+    return rows

@@ -1,0 +1,25 @@
+"""Fig. 7 — index construction time: BP (BallForest) vs BBT vs VAF."""
+
+from __future__ import annotations
+
+from repro.core.baselines import BBTree, VAFile
+from repro.core.index import build_index
+
+from .common import Row, dataset, timeit
+
+
+def run(scale: float = 0.02) -> list[Row]:
+    rows = []
+    for name in ("audio", "fonts", "deep", "sift"):
+        spec, data, _ = dataset(name, scale)
+        us_bp = timeit(lambda: build_index(data, spec.measure, m=8,
+                                           kmeans_iters=4), repeats=1)
+        us_bbt = timeit(lambda: BBTree(data, spec.measure), repeats=1)
+        us_vaf = timeit(lambda: VAFile(data, spec.measure), repeats=1)
+        n = data.shape[0]
+        rows += [
+            Row("fig7_construction", f"BP/{name}", us_bp, {"n": n}),
+            Row("fig7_construction", f"BBT/{name}", us_bbt, {"n": n}),
+            Row("fig7_construction", f"VAF/{name}", us_vaf, {"n": n}),
+        ]
+    return rows

@@ -1,0 +1,28 @@
+"""Fig. 14 — impact of data size (Sift subsets); M fixed at the paper's 22
+(Theorem 4: n has little effect on M*)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, dataset, timeit
+
+
+def run(scale: float = 0.01) -> list[Row]:
+    spec, data, queries = dataset("sift", scale)
+    rows = []
+    n = data.shape[0]
+    for frac in (0.2, 0.4, 0.6, 0.8, 1.0):
+        sub = data[: max(int(n * frac), 64)]
+        idx = build_index(sub, spec.measure, m=8, kmeans_iters=4)
+        us = timeit(lambda: search.knn_batch(idx, queries, 20), repeats=3)
+        res = search.knn_batch(idx, queries, 20)
+        cand = float(np.mean(np.asarray(res.num_candidates)))
+        rows.append(Row("fig14_datasize", f"sift/n={len(sub)}",
+                        us / len(queries),
+                        {"candidates": round(cand, 1),
+                         "bytes_moved": int(cand * spec.d * 4)}))
+    return rows

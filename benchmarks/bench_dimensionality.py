@@ -1,0 +1,31 @@
+"""Fig. 13 — impact of dimensionality (Fonts 10..400 dims), M* recomputed."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bregman import get_family
+from repro.core.index import build_index
+from repro.core.partition import fit_cost_model
+from repro.core import search
+
+from .common import Row, dataset, timeit
+
+
+def run(scale: float = 0.01) -> list[Row]:
+    spec, data, queries = dataset("fonts", scale)
+    rows = []
+    fam = get_family(spec.measure)
+    for d in (10, 50, 100, 200, 400):
+        sub = np.ascontiguousarray(data[:, :d])
+        qs = np.ascontiguousarray(queries[:, :d])
+        mstar = fit_cost_model(sub, fam).m_star()
+        idx = build_index(sub, spec.measure, m=mstar, kmeans_iters=4)
+        us = timeit(lambda: search.knn_batch(idx, qs, 20), repeats=3)
+        res = search.knn_batch(idx, qs, 20)
+        cand = float(np.mean(np.asarray(res.num_candidates)))
+        rows.append(Row("fig13_dimensionality", f"fonts/d={d}",
+                        us / len(qs),
+                        {"mstar": mstar, "candidates": round(cand, 1),
+                         "bytes_moved": int(cand * d * 4)}))
+    return rows

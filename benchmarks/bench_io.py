@@ -1,0 +1,37 @@
+"""Fig. 11 — I/O cost (bytes-moved proxy) vs k: BP / BBT / VAF."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import BBTree, VAFile
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, dataset
+
+
+def run(scale: float = 0.02) -> list[Row]:
+    rows = []
+    for name in ("audio", "deep"):
+        spec, data, queries = dataset(name, scale)
+        idx = build_index(data, spec.measure, m=8, kmeans_iters=4)
+        bbt = BBTree(data, spec.measure)
+        vaf = VAFile(data, spec.measure)
+        for k in (20, 60, 100):
+            res = search.knn_batch(idx, queries, k)
+            bp_bytes = float(np.mean(np.asarray(res.num_candidates))
+                             ) * data.shape[1] * 4
+            bbt_bytes = np.mean([bbt.knn(q, k)[2]["bytes_moved"]
+                                 for q in queries])
+            vaf_bytes = np.mean([vaf.knn(q, k)[2]["bytes_moved"]
+                                 for q in queries])
+            rows += [
+                Row("fig11_io", f"BP/{name}/k={k}", 0.0,
+                    {"bytes_moved": int(bp_bytes)}),
+                Row("fig11_io", f"BBT/{name}/k={k}", 0.0,
+                    {"bytes_moved": int(bbt_bytes)}),
+                Row("fig11_io", f"VAF/{name}/k={k}", 0.0,
+                    {"bytes_moved": int(vaf_bytes)}),
+            ]
+    return rows

@@ -1,0 +1,49 @@
+"""Kernel micro-benches: Pallas (interpret) vs pure-jnp reference.
+
+CPU-interpret timings are NOT TPU performance — they validate dispatch and
+give a structural sanity check; real kernel perf lives in the §Roofline
+analysis of the compiled HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+from .common import Row, timeit
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rng = np.random.default_rng(0)
+    n, m, q, d = 4096, 32, 8, 256
+    alpha = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.normal(size=(n, m)), jnp.float32))
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.abs(jnp.asarray(rng.normal(size=(q, m)), jnp.float32))
+
+    rows = [Row("kernels", "bregman_ub/ref",
+                timeit(jax.jit(lambda *a: ops.bregman_ub_matrix(*a, impl="ref")),
+                       alpha, sg, qc, sd), {"n": n, "q": q})]
+
+    rows_b = jnp.asarray(rng.normal(size=(512, d)), jnp.float32)
+    grad = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    rows.append(Row("kernels", "bregman_refine/ref",
+                    timeit(jax.jit(lambda r, g: ops.bregman_refine(
+                        r, g, jnp.float32(0.0), "squared_euclidean",
+                        impl="ref")), rows_b, grad), {"b": 512, "d": d}))
+
+    x = jnp.asarray(rng.normal(size=(2048, 64)), jnp.float32)
+    rows.append(Row("kernels", "pccp_corr/ref",
+                    timeit(jax.jit(lambda x: ops.pccp_correlation(
+                        x, impl="ref")), x), {"n": 2048, "d": 64}))
+
+    q4 = jnp.asarray(rng.normal(size=(1, 4, 128, 32)), jnp.bfloat16)
+    kv = jnp.asarray(rng.normal(size=(1, 2, 128, 32)), jnp.bfloat16)
+    rows.append(Row("kernels", "flash_attention/ref",
+                    timeit(jax.jit(lambda q, k, v: ops.flash_attention(
+                        q, k, v, impl="ref")), q4, kv, kv),
+                    {"s": 128}))
+    return rows

@@ -1,0 +1,33 @@
+"""Fig. 10 — impact of PCCP: candidates, bytes and time with/without."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, dataset, timeit
+
+
+def run(scale: float = 0.02) -> list[Row]:
+    rows = []
+    k = 20
+    for name in ("audio", "deep"):
+        spec, data, queries = dataset(name, scale)
+        for pccp in (True, False):
+            idx = build_index(data, spec.measure, m=8, pccp=pccp,
+                              kmeans_iters=4)
+
+            def q():
+                return search.knn_batch(idx, queries, k)
+
+            us = timeit(q, repeats=3)
+            res = q()
+            cand = float(np.mean(np.asarray(res.num_candidates)))
+            rows.append(Row(
+                "fig10_pccp", f"{name}/{'pccp' if pccp else 'contiguous'}",
+                us / len(queries),
+                {"candidates": round(cand, 1),
+                 "bytes_moved": int(cand * data.shape[1] * 4)}))
+    return rows

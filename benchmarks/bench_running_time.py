@@ -1,0 +1,34 @@
+"""Fig. 12 — running time vs k: BP / BBT / VAF / linear scan."""
+
+from __future__ import annotations
+
+from repro.core.baselines import BBTree, VAFile, linear_scan
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, dataset, timeit
+
+
+def run(scale: float = 0.02) -> list[Row]:
+    rows = []
+    for name in ("audio", "deep"):
+        spec, data, queries = dataset(name, scale)
+        idx = build_index(data, spec.measure, m=8, kmeans_iters=4)
+        bbt = BBTree(data, spec.measure)
+        vaf = VAFile(data, spec.measure)
+        for k in (20, 100):
+            us_bp = timeit(lambda: search.knn_batch(idx, queries, k),
+                           repeats=3) / len(queries)
+            us_bbt = timeit(lambda: [bbt.knn(q, k) for q in queries],
+                            repeats=1) / len(queries)
+            us_vaf = timeit(lambda: [vaf.knn(q, k) for q in queries],
+                            repeats=1) / len(queries)
+            us_lin = timeit(lambda: [linear_scan(data, q, k, spec.measure)
+                                     for q in queries], repeats=1) / len(queries)
+            rows += [
+                Row("fig12_time", f"BP/{name}/k={k}", us_bp, {}),
+                Row("fig12_time", f"BBT/{name}/k={k}", us_bbt, {}),
+                Row("fig12_time", f"VAF/{name}/k={k}", us_vaf, {}),
+                Row("fig12_time", f"LIN/{name}/k={k}", us_lin, {}),
+            ]
+    return rows

@@ -1,0 +1,76 @@
+"""Shared benchmark harness: timing, CSV emission, dataset scaling.
+
+Every bench module exposes ``run(scale) -> list[Row]``; benchmarks.run
+aggregates.  Default scale keeps each module in seconds on one CPU core —
+the paper's full dataset sizes are dry-run territory, not CPU-bench
+territory (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import PAPER_DATASETS, make_queries, make_vectors
+
+
+@dataclasses.dataclass
+class Row:
+    bench: str
+    name: str
+    us_per_call: float
+    derived: dict
+
+    def csv(self) -> str:
+        extra = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        return f"{self.bench},{self.name},{self.us_per_call:.1f},{extra}"
+
+
+def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds (blocks jax async)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if _is_jax(r) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r) if _is_jax(r) else None
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def _is_jax(x) -> bool:
+    return any(isinstance(l, jax.Array) for l in jax.tree.leaves(x))
+
+
+def dataset(name: str, scale: float, seed: int = 0, cap: int | None = 4000):
+    """CPU-sized slice of a paper dataset.
+
+    ``cap`` bounds n so the pure-python baselines (BB-tree) stay in
+    seconds; the paper's full n is dry-run/bench --scale territory.
+    """
+    spec = PAPER_DATASETS[name]
+    data = make_vectors(spec, scale=scale, seed=seed)
+    if cap is not None and data.shape[0] > cap:
+        data = data[:cap]
+    queries = make_queries(spec, num=10, scale=scale, data_seed=seed)
+    if cap is not None:
+        queries = queries[:10]
+    return spec, data, queries
+
+
+def recall(ids: np.ndarray, true_ids: np.ndarray) -> float:
+    return len(set(np.asarray(ids).tolist())
+               & set(np.asarray(true_ids).tolist())) / len(true_ids)
+
+
+def overall_ratio(dists: np.ndarray, true_dists: np.ndarray) -> float:
+    """The paper's OR metric: mean(D(p_i,q) / D(p*_i,q)) over rank i."""
+    d = np.maximum(np.asarray(dists, np.float64), 1e-12)
+    t = np.maximum(np.asarray(true_dists, np.float64), 1e-12)
+    return float(np.mean(d / t))

@@ -1,0 +1,58 @@
+"""Merge dry-run JSON shards and emit the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src:. python -m benchmarks.make_roofline_tables \
+        dryrun_all.json dryrun_rest1.json dryrun_multi.json ... \
+        --out-prefix roofline
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import roofline  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("jsons", nargs="+")
+    ap.add_argument("--out-prefix", default="roofline")
+    args = ap.parse_args()
+
+    merged: dict = {}
+    for path in args.jsons:
+        try:
+            recs = json.load(open(path))
+        except (OSError, ValueError) as e:
+            print(f"# skipping {path}: {e}", file=sys.stderr)
+            continue
+        for r in recs:
+            key = (r["arch"], r["shape"], r["mesh"])
+            # later files win (re-runs supersede)
+            merged[key] = r
+
+    records = list(merged.values())
+    with open(f"{args.out_prefix}_merged.json", "w") as f:
+        json.dump(records, f, indent=1)
+
+    singles = [r for r in records if r["mesh"] == "16x16"]
+    multis = [r for r in records if r["mesh"] == "2x16x16"]
+    for name, recs in (("single", singles), ("multi", multis)):
+        ok = [r for r in recs if r.get("ok")]
+        fail = [r for r in recs if not r.get("ok")]
+        with open(f"{args.out_prefix}_{name}.md", "w") as f:
+            f.write(f"# Roofline — {name}-pod mesh "
+                    f"({len(ok)} ok / {len(recs)} swept)\n\n")
+            f.write(roofline.table(recs))
+            f.write("\n")
+            if fail:
+                f.write("\nFailed cells:\n")
+                for r in fail:
+                    f.write(f"- {r['arch']} x {r['shape']}: "
+                            f"{r.get('error', '?')[:200]}\n")
+        print(f"{args.out_prefix}_{name}.md: {len(ok)}/{len(recs)} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""§Perf hillclimb harness: re-lower a cell under a named variant and diff
+its roofline terms against the baseline record.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate \
+        --arch qwen3-moe-30b-a3b --shape train_4k \
+        --variant remat_dots --baseline dryrun_all.json
+
+Variants are (config overrides, sharding-rule overrides, train-config)
+bundles — each one is a hypothesis from EXPERIMENTS.md §Perf.  The harness
+prints before/after terms so the iteration log writes itself.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def variant_space():
+    """name -> (config_overrides, rules_name, microbatches, note)."""
+    return {
+        "baseline": ({}, None, 1, "as swept"),
+        # compute-term levers
+        "remat_dots": ({"remat_policy": "dots"}, None, 1,
+                       "save matmul outputs: kill bwd recompute FLOPs "
+                       "(useful 0.67 -> ~0.75) at activation-memory cost"),
+        "remat_dots_micro4": ({"remat_policy": "dots"}, None, 4,
+                              "dots policy + 4 microbatches: recompute "
+                              "savings with 1/4 the live activations"),
+        "micro2": ({}, None, 2, "2 microbatches"),
+        "no_remat": ({"remat": False}, None, 1,
+                     "no rematerialization at all (memory ceiling probe)"),
+        # memory-term levers
+        "micro4": ({}, None, 4, "4 microbatches: 4x smaller live batch"),
+        "loss_chunk_2k": ({}, None, 1, "fewer, larger loss chunks"),
+        # collective-term levers
+        "replicated_seq": ({}, "noseq", 1,
+                           "disable sequence parallelism (ablation: the "
+                           "paper-naive activation layout)"),
+        "replicated_seq_micro8": ({}, "noseq", 8,
+                                  "no SP + 8 microbatches: trade the SP "
+                                  "activation all-gathers for live-batch "
+                                  "slices (collective-bound trains)"),
+        "moe_group_2k": ({"moe_group": 2048}, None, 1,
+                         "bigger MoE dispatch groups: fewer, larger a2a"),
+        "moe_cf1": ({"moe_cf": 1.0}, None, 1,
+                    "capacity factor 1.0: 20% less expert compute+a2a, "
+                    "more drops"),
+        "attn_chunk_2k": ({"q_chunk": 2048, "kv_chunk": 2048}, None, 1,
+                          "bigger flash tiles: fewer chunk boundaries"),
+        "rwkv_chunk_256": ({"rwkv_chunk": 256}, None, 1,
+                           "bigger WKV chunks: fewer state hops, bigger "
+                           "pairwise tensor"),
+    }
+
+
+def apply_variant(arch, overrides):
+    """Translate variant overrides into a config object."""
+    import dataclasses
+    from repro import configs
+    kw = dict(overrides)
+    moe_group = kw.pop("moe_group", None)
+    moe_cf = kw.pop("moe_cf", None)
+    cfg = configs.get_config(arch, **kw)
+    if moe_group or moe_cf:
+        moe = dataclasses.replace(
+            cfg.moe,
+            **({"group_tokens": moe_group} if moe_group else {}),
+            **({"capacity_factor": moe_cf} if moe_cf else {}))
+        cfg = dataclasses.replace(cfg, moe=moe)
+    return cfg
+
+
+def run(arch: str, shape: str, variant: str, multi_pod: bool = False):
+    # import inside: XLA_FLAGS must be set by dryrun import order
+    from repro.launch import dryrun
+    overrides, rules_name, micro, note = variant_space()[variant]
+
+    # rules override: register a no-seq rules table on the fly
+    if rules_name == "noseq":
+        from repro.dist import sharding as shd
+        shd.NOSEQ_RULES = dict(shd.DEFAULT_RULES, seq=())
+        rules_name_for_cell = "noseq"
+        # patch the lookup dict used by run_cell
+        _orig = dryrun.run_cell
+
+        def run_cell(*a, **kw):
+            kw["rules_name"] = None
+            import repro.dist.sharding as s
+            saved = s.DEFAULT_RULES
+            s.DEFAULT_RULES = shd.NOSEQ_RULES
+            try:
+                return _orig(*a, **kw)
+            finally:
+                s.DEFAULT_RULES = saved
+        cell_fn = run_cell
+    else:
+        cell_fn = dryrun.run_cell
+
+    import dataclasses as _dc
+    cfg = apply_variant(arch, overrides) if overrides else None
+    if cfg is not None:
+        # route through run_cell's overrides path by monkeypatching configs
+        from repro import configs as _configs
+        _orig_get = _configs.get_config
+        _configs.get_config = lambda a, **kw: (
+            cfg if a == arch and not kw else _orig_get(a, **kw))
+        try:
+            rec = cell_fn(arch, shape, multi_pod, microbatches=micro)
+        finally:
+            _configs.get_config = _orig_get
+    else:
+        rec = cell_fn(arch, shape, multi_pod, microbatches=micro)
+    rec["variant"] = variant
+    rec["note"] = note
+    return rec
+
+
+def main():
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--baseline", default=None,
+                    help="dryrun JSON with the baseline record")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    rec = run(args.arch, args.shape, args.variant, args.multi_pod)
+    roofline = importlib.import_module("benchmarks.roofline")
+    after = roofline.derive(rec)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("traceback",)}, indent=1,
+                     default=str)[:2000])
+    if after:
+        print("\nAFTER :", {k: (f"{v:.4g}" if isinstance(v, float) else v)
+                            for k, v in after.items()})
+    if args.baseline:
+        base = [r for r in json.load(open(args.baseline))
+                if r["arch"] == args.arch and r["shape"] == args.shape
+                and r["mesh"] == rec["mesh"]]
+        if base:
+            before = roofline.derive(base[0])
+            print("BEFORE:", {k: (f"{v:.4g}" if isinstance(v, float) else v)
+                              for k, v in (before or {}).items()})
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec, default=str) + "\n")
+
+
+if __name__ == "__main__":
+    main()

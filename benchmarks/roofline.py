@@ -1,0 +1,139 @@
+"""Roofline terms per (arch x shape x mesh) from dry-run records.
+
+Reads the JSON written by ``repro.launch.dryrun --out`` and derives, per
+cell (TPU v5e constants from repro.launch.mesh):
+
+    compute term    = per-device HLO FLOPs / 197e12
+    memory term     = per-device HLO bytes / 819e9
+    collective term = per-device link bytes / 50e9
+
+Two collective accountings are reported:
+
+* ``simple``: sum of collective operand bytes (the brief's formula);
+* ``ring``:   ring-algorithm link traffic per device —
+      all-reduce      2 (p-1)/p x bytes
+      all-gather      (p-1)      x bytes   (operand = the local shard)
+      reduce-scatter  (p-1)/p    x bytes
+      all-to-all      (p-1)/p    x bytes
+      collective-permute      1  x bytes
+
+Also derived: MODEL_FLOPS = 6·N·D (train) / 2·N·D (serve), the useful-
+compute fraction MODEL_FLOPS / (chips x HLO_FLOPs/device), the dominant
+term, and the roofline fraction = ideal-compute-time / bounding-term-time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.roofline` from repo root
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+RING_FACTORS = {
+    "all-reduce": lambda p: 2.0 * (p - 1) / p if p > 1 else 0.0,
+    "all-gather": lambda p: float(p - 1),
+    "reduce-scatter": lambda p: (p - 1) / p if p > 1 else 0.0,
+    "all-to-all": lambda p: (p - 1) / p if p > 1 else 0.0,
+    "ragged-all-to-all": lambda p: (p - 1) / p if p > 1 else 0.0,
+    "collective-permute": lambda p: 1.0,
+}
+
+
+def derive(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    compute_s = hlo["flops_per_device"] / PEAK_FLOPS_BF16
+    memory_s = hlo["bytes_per_device"] / HBM_BW
+    simple_s = hlo["collective_bytes_per_device"] / ICI_BW
+
+    ring_bytes = 0.0
+    for kind, agg in hlo["collectives"].items():
+        # group size: fall back to the mesh minor axis when unknown
+        p = 16
+        factor = RING_FACTORS.get(kind, lambda p: 1.0)(p)
+        ring_bytes += agg["bytes_in"] * factor
+    ring_s = ring_bytes / ICI_BW
+
+    model_flops = rec["model_flops"]
+    ideal_s = model_flops / (chips * PEAK_FLOPS_BF16)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": ring_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_simple_s": simple_s, "collective_ring_s": ring_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_fraction": model_flops / max(chips * hlo["flops_per_device"],
+                                             1e-30),
+        "roofline_fraction": ideal_s / max(bound_s, 1e-30),
+        # serve cells carry the documented CPU-bf16-upcast adjustment
+        "peak_gib": rec["memory"].get(
+            "peak_bytes_tpu_adjusted",
+            rec["memory"]["peak_bytes_est"]) / 2**30,
+        "fits_hbm": rec["memory"].get(
+            "peak_bytes_tpu_adjusted",
+            rec["memory"]["peak_bytes_est"]) < 16 * 2**30,
+    }
+
+
+MOVE_DOWN = {
+    "compute": "cut remat recompute (remat_policy=dots) / rebalance "
+               "under-sharded matmuls",
+    "memory": "fuse or shrink HBM traffic: bigger flash tiles, fewer "
+              "materialized intermediates, bf16 carriers",
+    "collective": "reshard to cut gather volume (weight-stationary layout) "
+                  "or overlap collectives with compute",
+}
+
+
+def move_down(r: dict) -> str:
+    if r["dominant"] == "compute" and r["useful_fraction"] < 0.7 \
+            and r["shape"].startswith("train"):
+        return "compute is 1/3 remat recompute: remat_policy=dots"
+    return MOVE_DOWN[r["dominant"]]
+
+
+def table(records: list[dict]) -> str:
+    rows = [derive(r) for r in records]
+    rows = [r for r in rows if r]
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s "
+           "| dominant | useful | roofline | peak GiB (adj) | fits "
+           "| to move the dominant term down |")
+    sep = "|" + "---|" * 12
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_ring_s']:.3e} | {r['dominant']} "
+            f"| {r['useful_fraction']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['peak_gib']:.1f} | {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {move_down(r)} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("dryrun_json")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    records = json.load(open(args.dryrun_json))
+    if args.csv:
+        for r in records:
+            d = derive(r)
+            if d:
+                print(",".join(str(v) for v in d.values()))
+    else:
+        print(table(records))
+
+
+if __name__ == "__main__":
+    main()

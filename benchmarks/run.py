@@ -1,0 +1,59 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.02] [--only fig12]
+
+Prints ``bench,name,us_per_call,derived`` CSV rows.  The roofline table
+(deliverable g) reads the dry-run JSON instead: ``benchmarks/roofline.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "bench_construction",    # Fig. 7
+    "bench_partitions",      # Figs. 8-9
+    "bench_pccp",            # Fig. 10
+    "bench_io",              # Fig. 11
+    "bench_running_time",    # Fig. 12
+    "bench_dimensionality",  # Fig. 13
+    "bench_datasize",        # Fig. 14
+    "bench_approx",          # Fig. 15
+    "bench_kernels",         # kernel micro-benches
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=None,
+                    help="dataset scale factor (default: per-module)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args(argv)
+
+    print("bench,name,us_per_call,derived")
+    failures = 0
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.time()
+        try:
+            rows = (mod.run(args.scale) if args.scale is not None
+                    else mod.run())
+        except Exception as e:  # noqa: BLE001 — keep the sweep going
+            print(f"# {mod_name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+            failures += 1
+            continue
+        for row in rows:
+            print(row.csv())
+        print(f"# {mod_name}: {time.time() - t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,64 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workload.
+
+``get_config(arch_id)`` -> model config (exact published numbers);
+``get_reduced(arch_id)`` -> CPU-smoke-sized config of the same family;
+``arch_cells()`` -> every (arch x shape) dry-run cell with skip notes.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from .common import SHAPES, ShapeSpec, batch_axes, batch_structs, cache_structs  # noqa: F401
+
+_MODULES = {
+    "whisper-tiny": "whisper_tiny",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "qwen3-32b": "qwen3_32b",
+    "starcoder2-3b": "starcoder2_3b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str, **overrides):
+    return _module(arch_id).config(**overrides)
+
+
+def get_reduced(arch_id: str):
+    return _module(arch_id).reduced_config()
+
+
+def arch_shapes(arch_id: str) -> tuple[str, ...]:
+    return _module(arch_id).SHAPES
+
+
+def arch_family(arch_id: str) -> str:
+    return _module(arch_id).FAMILY
+
+
+def arch_cells():
+    """All (arch, shape, runnable, note) dry-run cells — 40 total."""
+    cells = []
+    for arch in ARCH_IDS:
+        mod = _module(arch)
+        for shape in SHAPES:
+            if shape in mod.SHAPES:
+                cells.append((arch, shape, True, ""))
+            else:
+                cells.append((arch, shape, False,
+                              "long_500k skipped: full quadratic attention "
+                              "(see DESIGN.md §Arch-applicability)"))
+    return cells

@@ -1,0 +1,107 @@
+"""Shape grid shared by all LM archs + input-spec builders.
+
+The four assigned input shapes (seq_len x global_batch):
+
+    train_4k     4,096 x 256    training       -> train_step
+    prefill_32k  32,768 x 32    inference      -> prefill
+    decode_32k   32,768 x 128   inference      -> decode_step (1 new token)
+    long_500k    524,288 x 1    long-context   -> decode_step (sub-quadratic
+                                                  archs only; see DESIGN.md)
+
+``input_specs`` returns ShapeDtypeStructs only — the dry-run never
+allocates.  Extras (audio frames / vision patches) come from the bundle's
+``extra_inputs`` declaration (modality frontends are stubs per the brief).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def positions_struct(cfg, b: int, s: int) -> jax.ShapeDtypeStruct:
+    if getattr(cfg, "mrope_section", None):
+        return jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def batch_structs(bundle, shape: ShapeSpec) -> dict[str, Any]:
+    """Model inputs for one shape as ShapeDtypeStructs.
+
+    train:   {tokens, labels, positions, *extras}
+    prefill: {tokens, positions, lengths, *extras}
+    decode:  {tokens (B,1), positions (B,1[,3]), lengths}
+    """
+    cfg = bundle.cfg
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "positions": positions_struct(cfg, b, s),
+        }
+    elif shape.kind == "prefill":
+        s = shape.seq_len
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "positions": positions_struct(cfg, b, s),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    else:  # decode: one new token against an S_kv cache
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "positions": positions_struct(cfg, b, 1),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    if shape.kind != "decode":
+        for name, (shape_fn, dtype, _axes) in bundle.extra_inputs.items():
+            out[name] = jax.ShapeDtypeStruct(shape_fn(b, shape.seq_len), dtype)
+    return out
+
+
+def batch_axes(bundle, shape: ShapeSpec) -> dict[str, tuple]:
+    """Logical axes for each batch input (resolved by dist/sharding.py)."""
+    cfg = bundle.cfg
+    pos = ("batch", "seq", None) if getattr(cfg, "mrope_section", None) \
+        else ("batch", "seq")
+    if shape.kind == "train":
+        out = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+               "positions": pos}
+    elif shape.kind == "prefill":
+        out = {"tokens": ("batch", "seq"), "positions": pos,
+               "lengths": ("batch",)}
+    else:
+        pos1 = ("batch", None, None) if getattr(cfg, "mrope_section", None) \
+            else ("batch", None)
+        out = {"tokens": ("batch", None), "positions": pos1,
+               "lengths": ("batch",)}
+    if shape.kind != "decode":
+        for name, (_fn, _dt, axes) in bundle.extra_inputs.items():
+            out[name] = axes
+    return out
+
+
+def cache_structs(bundle, shape: ShapeSpec):
+    """Decode/prefill caches as ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len))

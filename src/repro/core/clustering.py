@@ -1,0 +1,80 @@
+"""Bregman k-means (Banerjee et al. style) for the ball-forest index.
+
+Assignment minimizes ``D_f(x, c)`` (data in the first slot); the optimal
+center for that orientation is the arithmetic mean of the cluster, so Lloyd
+iterations are exact.
+
+TPU-friendly pairwise-distance form (no (n, C, w) intermediate):
+
+    D_f(x, c) = sum_j f(x_j)  -  x . f'(c)  +  [c . f'(c) - f(c)]
+              =   fx[n]      -   (X @ G^T)[n, C]  +  cconst[C]
+
+i.e. one (n, w) x (w, C) matmul per iteration — the same fused form the
+refinement kernel uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pairwise_bregman(x: Array, centers: Array, mask: Array, family) -> Array:
+    """D_f(x_i, c_j) for all pairs, masked dims excluded. (n, C)."""
+    mask = mask[None, :]
+    fx = jnp.sum(family.phi(x) * mask, axis=-1)                 # (n,)
+    g = family.phi_prime(centers) * mask                        # (C, w)
+    cconst = jnp.sum(centers * g - family.phi(centers) * mask, axis=-1)  # (C,)
+    cross = x @ g.T                                             # (n, C) matmul
+    return fx[:, None] - cross + cconst[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("family", "num_clusters", "iters"))
+def kmeans(
+    points: Array,
+    mask: Array,
+    key: Array,
+    *,
+    family,
+    num_clusters: int,
+    iters: int = 12,
+) -> tuple[Array, Array]:
+    """Lloyd iterations; returns (centers (C, w), assignment (n,) int32).
+
+    Empty clusters keep their previous center (standard fix; a reseed would
+    break jit determinism).
+    """
+    n, w = points.shape
+    c = num_clusters
+    init_idx = jax.random.choice(key, n, shape=(c,), replace=False)
+    centers0 = points[init_idx]
+
+    def body(_, centers):
+        dist = pairwise_bregman(points, centers, mask, family)   # (n, C)
+        assign = jnp.argmin(dist, axis=-1)
+        sums = jax.ops.segment_sum(points, assign, num_segments=c)
+        cnts = jax.ops.segment_sum(jnp.ones((n,), points.dtype), assign, num_segments=c)
+        means = sums / jnp.maximum(cnts, 1.0)[:, None]
+        return jnp.where((cnts > 0)[:, None], means, centers)
+
+    centers = jax.lax.fori_loop(0, iters, body, centers0)
+    assign = jnp.argmin(pairwise_bregman(points, centers, mask, family), axis=-1)
+    return centers, assign.astype(jnp.int32)
+
+
+def cluster_stats(values: Array, assign: Array, num_clusters: int) -> dict:
+    """Per-cluster min/max/count of a per-point scalar (for pruning bounds)."""
+    big = jnp.asarray(jnp.finfo(values.dtype).max, values.dtype)
+    vmin = jax.ops.segment_min(values, assign, num_segments=num_clusters)
+    vmax = jax.ops.segment_max(values, assign, num_segments=num_clusters)
+    cnt = jax.ops.segment_sum(jnp.ones_like(values), assign, num_segments=num_clusters)
+    empty = cnt == 0
+    # Empty clusters must never be admitted by the pruning test: make their
+    # interval impossible (min=+inf, max=0 => LB=+inf).
+    vmin = jnp.where(empty, big, vmin)
+    vmax = jnp.where(empty, jnp.zeros_like(vmax), vmax)
+    return {"min": vmin, "max": vmax, "count": cnt}

@@ -1,0 +1,207 @@
+"""BallForest — the TPU-native BB-forest (paper §6, adapted per DESIGN.md §2).
+
+One flat Bregman-ball table per subspace (IVF-style, no pointer chasing),
+all tables indexing the SAME physical point order.  The shared order is the
+paper's BB-forest layout trick: points are sorted by the reference
+subspace's cluster id, so candidate gathers from different subspaces touch
+overlapping regions (the TPU analogue of shared disk pages, boosted by PCCP
+making subspace clusterings similar).
+
+Pruning uses the tuple-space cluster lower bound (DESIGN.md §3.3):
+
+    LB_cluster(i) = alpha_min[c,i] + qconst[i] - sqrt_gamma_max[c,i]*sqrt_delta[i]
+                  <= min_{x in c} D_f(x_i., y_i.)
+
+so "LB_cluster > qb_i" prunes cluster c in subspace i without any member
+distance evaluation, and never prunes a true Theorem-3 candidate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bregman import BregmanFamily, get_family
+from .transform import Partition, make_partition, p_transform
+from .partition import build_pccp_partition, fit_cost_model
+from .clustering import kmeans, cluster_stats, pairwise_bregman
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class BallForest:
+    """Immutable search index. All arrays live on device (or sharded)."""
+
+    family_name: str
+    partition: Partition
+    num_clusters: int
+    data: Array           # (n, d)  points in shared layout order
+    point_ids: Array      # (n,)    original ids (layout -> original)
+    alpha: Array          # (n, M)  P-tuple alpha
+    sqrt_gamma: Array     # (n, M)  P-tuple sqrt(gamma)
+    assign: Array         # (n, M)  cluster id of each point per subspace
+    alpha_min: Array      # (M, C)  per-cluster min alpha
+    sqrt_gamma_max: Array # (M, C)  per-cluster max sqrt(gamma)
+    counts: Array         # (M, C)
+    centers: Array        # (M, C, w) cluster centers (diagnostics/benchmarks)
+    beta_samples: Array   # (S,) sorted empirical beta_xy sample (approx search)
+
+    @property
+    def family(self) -> BregmanFamily:
+        return get_family(self.family_name)
+
+    @property
+    def n(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.partition.num_subspaces
+
+    def tree_flatten(self):
+        dyn = (self.data, self.point_ids, self.alpha, self.sqrt_gamma,
+               self.assign, self.alpha_min, self.sqrt_gamma_max, self.counts,
+               self.centers, self.beta_samples)
+        static = (self.family_name, self.partition, self.num_clusters)
+        return dyn, static
+
+    @classmethod
+    def tree_unflatten(cls, static, dyn):
+        return cls(static[0], static[1], static[2], *dyn)
+
+
+jax.tree_util.register_pytree_node(
+    BallForest, BallForest.tree_flatten, BallForest.tree_unflatten
+)
+
+
+def default_num_clusters(n: int) -> int:
+    return int(np.clip(n // 32, 8, 8192))
+
+
+def build_index(
+    data,
+    family: str | BregmanFamily,
+    *,
+    m: int | None = None,
+    pccp: bool = True,
+    num_clusters: int | None = None,
+    kmeans_iters: int = 12,
+    beta_sample_size: int = 4096,
+    gamma_buckets: int = 4,
+    seed: int = 0,
+) -> BallForest:
+    """Offline precomputation (paper Alg. 5): partition -> transform -> forest.
+
+    ``m=None`` fits the Theorem-4 cost model and uses M*.
+
+    ``gamma_buckets`` (beyond-paper tightening): within each ball, members
+    are split into gamma-quantile buckets and each bucket contributes its
+    own (alpha_min, sqrt_gamma_max) corner, so the cluster lower bound
+    LB = alpha_min + qconst - sqrt_gamma_max*sqrt_delta is evaluated on
+    buckets whose gamma spread is ~1/gamma_buckets of the ball's — strictly
+    tighter, still conservative (each point belongs to exactly one bucket
+    and its bucket's corner lower-bounds its distance).
+    """
+    fam = get_family(family) if isinstance(family, str) else family
+    data = jnp.asarray(data, dtype=jnp.float32)
+    n, d = data.shape
+    data_np = np.asarray(data)
+
+    if m is None:
+        m = fit_cost_model(data_np, fam, seed=seed).m_star()
+    m = int(np.clip(m, 1, d))
+
+    if pccp and m < d:
+        part = build_pccp_partition(data_np, m, seed=seed)
+    else:
+        part = make_partition(d, m)
+
+    c = num_clusters or default_num_clusters(n)
+    c = int(min(c, n))
+    key = jax.random.PRNGKey(seed)
+
+    # Per-subspace Bregman k-means over the (n, w) subspace views.  The jit
+    # cache is shared across subspaces (same shapes / family).
+    sub_views = part.gather(data)                   # (n, M, w)
+    mask = part.subspace_mask()                     # (M, w)
+    centers_list, assign_list = [], []
+    for i in range(m):
+        ki = jax.random.fold_in(key, i)
+        cen, asg = kmeans(
+            sub_views[:, i, :], mask[i], ki,
+            family=fam, num_clusters=c, iters=kmeans_iters,
+        )
+        centers_list.append(cen)
+        assign_list.append(asg)
+    centers = jnp.stack(centers_list)               # (M, C, w)
+    assign = jnp.stack(assign_list, axis=1)         # (n, M)
+
+    # Shared layout: order points by the reference subspace's cluster id.
+    order = jnp.argsort(assign[:, 0], stable=True)
+    data_l = data[order]
+    assign_l = assign[order]
+    point_ids = order.astype(jnp.int32)
+
+    p = p_transform(data_l, part, fam)
+    alpha, sqrt_gamma = p["alpha"], p["sqrt_gamma"]
+
+    # gamma-bucketed corners: effective segment id = ball * nb + bucket,
+    # bucket = global per-subspace gamma quantile of the member
+    nb = max(int(gamma_buckets), 1)
+    assign_eff = []
+    for i in range(m):
+        qs = jnp.quantile(sqrt_gamma[:, i],
+                          jnp.linspace(0.0, 1.0, nb + 1)[1:-1])
+        bucket = jnp.searchsorted(qs, sqrt_gamma[:, i]).astype(jnp.int32)
+        assign_eff.append(assign_l[:, i] * nb + bucket)
+    assign_eff = jnp.stack(assign_eff, axis=1)      # (n, M) in [0, C*nb)
+    c_eff = c * nb
+
+    amin = jnp.stack([
+        cluster_stats(alpha[:, i], assign_eff[:, i], c_eff)["min"]
+        for i in range(m)
+    ])                                              # (M, C*nb)
+    gmax = jnp.stack([
+        cluster_stats(sqrt_gamma[:, i], assign_eff[:, i], c_eff)["max"]
+        for i in range(m)
+    ])
+    counts = jnp.stack([
+        cluster_stats(alpha[:, i], assign_eff[:, i], c_eff)["count"]
+        for i in range(m)
+    ])
+
+    # Empirical beta_xy sample for the approximate search (Prop. 1): the CDF
+    # of the cross term over random (data, query) pairs.
+    rng = np.random.default_rng(seed)
+    s = min(beta_sample_size, n * n)
+    xi = rng.integers(0, n, size=s)
+    yi = rng.integers(0, n, size=s)
+    grads = fam.phi_prime(data_np[yi])
+    betas = -np.sum(data_np[xi] * grads, axis=-1)
+    beta_samples = jnp.sort(jnp.asarray(betas, dtype=jnp.float32))
+
+    return BallForest(
+        family_name=fam.name,
+        partition=part,
+        num_clusters=c_eff,
+        data=data_l,
+        point_ids=point_ids,
+        alpha=alpha,
+        sqrt_gamma=sqrt_gamma,
+        assign=assign_eff,
+        alpha_min=amin,
+        sqrt_gamma_max=gmax,
+        counts=counts,
+        centers=centers,
+        beta_samples=beta_samples,
+    )

@@ -1,0 +1,225 @@
+"""Exact and approximate kNN search (paper Alg. 6 + §8) on a BallForest.
+
+TPU execution model: everything after the query transform is one jit'd
+program with static shapes.  The dynamic-size candidate set of the paper is
+realized as a static ``budget``-sized selection with an exactness flag
+(DESIGN.md §6, item 5); :func:`knn_search` is the jit core and
+:func:`knn` is the host wrapper that doubles the budget on overflow, so
+results are ALWAYS exact for the exact mode.
+
+Pipeline per query (Alg. 6):
+  1. Q-transform (O(d)).
+  2. UB filter over all points — matmul form (kernels/bregman_ub).
+  3. tau = k-th smallest UB; per-subspace bounds qb (Alg. 4).
+  4. Ball pruning per subspace (tuple-space LB, DESIGN §3.3); candidate mask
+     = union over subspaces (Theorem 3).
+  5. Refine selected candidates with exact D_f (kernels/bregman_dist),
+     global top-k.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bregman import get_family
+from .index import BallForest
+from .transform import q_transform
+from . import bounds
+
+Array = jax.Array
+
+NEG_BIG = -1e30
+POS_BIG = 1e30
+
+
+class SearchResult(NamedTuple):
+    ids: Array          # (k,) original point ids
+    dists: Array        # (k,) exact Bregman distances
+    exact: Array        # () bool — candidate set fit in the budget
+    num_candidates: Array  # () int32 — Theorem-3 union size
+
+
+def _query_struct(index: BallForest, y: Array) -> dict:
+    fam = index.family
+    q = q_transform(y, index.partition, fam)
+    q.update(bounds.query_refine_constants(y, fam))
+    return q
+
+
+def _candidate_mask(index: BallForest, q: dict, qb: Array) -> Array:
+    """Theorem-3 union membership via per-subspace cluster pruning. (n,) bool.
+
+    Membership must be CLUSTER-granular: Theorem 3's pigeonhole argument
+    bounds the per-subspace EXACT distance (D_i <= qb_i for some i), and
+    the conservative cluster lower bound LB_c <= min_{x in c} D_i never
+    prunes a cluster containing such a point.  (A per-point test on the
+    Cauchy UPPER bound components is NOT valid — UB_i > qb_i for all i does
+    not contradict D <= tau.)  Tightness comes from the index's
+    gamma-bucketed corner stats (core/index.py): each ball contributes
+    ``num_buckets`` (alpha_min, sqrt_gamma_max) corners instead of one.
+    """
+    # Bucketed-corner lower bounds: (M, C_eff)
+    lb = (index.alpha_min + q["qconst"][:, None]
+          - index.sqrt_gamma_max * q["sqrt_delta"][:, None])
+    admitted = lb <= qb[:, None]                       # (M, C_eff) bool
+    # Per-point admission per subspace, then union.
+    per_sub = jax.vmap(lambda a, i: a[i], in_axes=(0, 1), out_axes=1)(
+        admitted, index.assign
+    )                                                  # (n, M)
+    return jnp.any(per_sub, axis=-1)
+
+
+def _refine(index: BallForest, q: dict, sel: Array, valid: Array, k: int):
+    """Exact distances for the selected rows; invalid rows pushed to +inf."""
+    from repro.kernels import ops as kernel_ops
+    rows = jnp.take(index.data, sel, axis=0)           # (budget, d)
+    dist = kernel_ops.bregman_refine(rows, q["grad"], q["c_y"], index.family_name)
+    dist = jnp.where(valid, dist, POS_BIG)
+    neg, pos = jax.lax.top_k(-dist, k)
+    ids = jnp.take(index.point_ids, jnp.take(sel, pos))
+    return ids, -neg
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget"))
+def knn_search(index: BallForest, y: Array, k: int, budget: int) -> SearchResult:
+    """Exact kNN for one query (jit core, static budget)."""
+    from repro.kernels import ops as kernel_ops
+    q = _query_struct(index, y)
+
+    # ---- filter: total UB for every point (MXU matmul form) ----
+    totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
+        index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"]
+    )
+    neg_vals, idx = jax.lax.top_k(-totals, k)
+    kth = idx[-1]
+    tau = -neg_vals[-1]
+    qb = comp_kth_fn(kth)                              # (M,) Alg. 4 bounds
+
+    # ---- ball pruning + union (Theorem 3) ----
+    mask = _candidate_mask(index, q, qb)
+    num_candidates = jnp.sum(mask.astype(jnp.int32))
+
+    # ---- static-budget selection: all union members first, by UB ----
+    priority = jnp.where(mask, POS_BIG - totals, NEG_BIG - totals)
+    _, sel = jax.lax.top_k(priority, budget)
+    valid = jnp.take(mask, sel)
+
+    ids, dists = _refine(index, q, sel, valid, k)
+    exact = num_candidates <= budget
+    return SearchResult(ids=ids, dists=dists, exact=exact,
+                        num_candidates=num_candidates)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget"))
+def knn_search_approx(
+    index: BallForest, y: Array, k: int, budget: int, p_guarantee: Array
+) -> SearchResult:
+    """Approximate kNN with probability guarantee p (paper §8, Prop. 1).
+
+    The Cauchy slack mu of the k-th bound is shrunk to c*mu with
+    ``c = Psi^-1(p*Psi(mu) + (1-p)*Psi(-kappa)) / mu`` where Psi is the
+    empirical CDF of the cross term beta_xy (index.beta_samples); each
+    subspace bound's sqrt term is scaled by c.
+    """
+    from repro.kernels import ops as kernel_ops
+    q = _query_struct(index, y)
+
+    totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
+        index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"]
+    )
+    neg_vals, idx = jax.lax.top_k(-totals, k)
+    kth = idx[-1]
+    qb = comp_kth_fn(kth)
+
+    # Full-space kappa and mu of the k-th bound (paper §8 notation).
+    sqrt_term = jnp.take(index.sqrt_gamma, kth, axis=0) * q["sqrt_delta"]  # (M,)
+    kappa_i = qb - sqrt_term                           # per-subspace kappa
+    kappa = jnp.sum(kappa_i)
+    mu = jnp.sum(sqrt_term)
+
+    # Empirical CDF interpolation on the sorted beta sample.
+    samples = index.beta_samples
+    s = samples.shape[0]
+
+    def cdf(t):
+        return jnp.searchsorted(samples, t, side="right").astype(jnp.float32) / s
+
+    def inv_cdf(u):
+        pos = jnp.clip(u * (s - 1), 0.0, s - 1.0)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, s - 1)
+        w = pos - lo.astype(jnp.float32)
+        return samples[lo] * (1 - w) + samples[hi] * w
+
+    target = p_guarantee * cdf(mu) + (1.0 - p_guarantee) * cdf(-kappa)
+    c = jnp.clip(inv_cdf(target) / jnp.maximum(mu, 1e-12), 0.0, 1.0)
+
+    qb_approx = kappa_i + c * sqrt_term                # shrunk bounds
+
+    mask = _candidate_mask(index, q, qb_approx)
+    num_candidates = jnp.sum(mask.astype(jnp.int32))
+    priority = jnp.where(mask, POS_BIG - totals, NEG_BIG - totals)
+    _, sel = jax.lax.top_k(priority, budget)
+    valid = jnp.take(mask, sel)
+    ids, dists = _refine(index, q, sel, valid, k)
+    return SearchResult(ids=ids, dists=dists, exact=num_candidates <= budget,
+                        num_candidates=num_candidates)
+
+
+# ---------------------------------------------------------------------------
+# Host wrappers (escape hatch: double the budget until the union fits)
+# ---------------------------------------------------------------------------
+
+def default_budget(index: BallForest, k: int) -> int:
+    """Initial refine budget ~ the cost model's candidate estimate."""
+    n = index.n
+    return int(min(n, max(4 * k, 64, n // 16)))
+
+
+def knn(index: BallForest, y, k: int, budget: int | None = None,
+        approx_p: float | None = None) -> SearchResult:
+    """Host-level kNN: retries with doubled budget when the union overflows.
+
+    Always exact when ``approx_p is None``; with ``approx_p`` the result has
+    the paper's probability guarantee instead.
+    """
+    y = jnp.asarray(y, jnp.float32)
+    budget = budget or default_budget(index, k)
+    while True:
+        if approx_p is None:
+            res = knn_search(index, y, k, budget)
+        else:
+            res = knn_search_approx(index, y, k, budget,
+                                    jnp.float32(approx_p))
+        if bool(res.exact) or budget >= index.n:
+            return res
+        budget = min(index.n, budget * 2)
+
+
+def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
+              approx_p: float | None = None):
+    """vmapped batch search (single retry policy across the batch)."""
+    ys = jnp.asarray(ys, jnp.float32)
+    budget = budget or default_budget(index, k)
+    if approx_p is None:
+        fn = jax.vmap(lambda y: knn_search(index, y, k, budget))
+    else:
+        fn = jax.vmap(lambda y: knn_search_approx(index, y, k, budget,
+                                                  jnp.float32(approx_p)))
+    res = fn(ys)
+    if approx_p is None and not bool(jnp.all(res.exact)) and budget < index.n:
+        return knn_batch(index, ys, k, min(index.n, budget * 4), approx_p)
+    return res
+
+
+def brute_force_knn(data, y, k: int, family) -> tuple[Array, Array]:
+    """Linear-scan oracle (used by tests and as the paper's baseline floor)."""
+    fam = get_family(family) if isinstance(family, str) else family
+    dist = fam.distance(jnp.asarray(data), jnp.asarray(y)[None, :])
+    neg, idx = jax.lax.top_k(-dist, k)
+    return idx, -neg

@@ -1,0 +1,2 @@
+# Deterministic, step-addressable synthetic data pipelines (tokens for LM
+# training; correlated vectors for the paper's kNN workload).

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel — fused Cauchy upper-bound filter (paper Alg. 1/4).
+
+Computes, for every point tile, the total upper bound
+
+    ub[n, q] = rowsum(alpha)[n] + qsum[q] + sqrt_gamma[n, :] . sqrt_delta[q, :]
+
+i.e. a (n, M) x (M, q) matmul with a fused rank-1 bias — the filter phase of
+BrePartition collapsed onto the MXU (DESIGN.md §3.1).  The VMEM tile
+(``block_n`` x M_padded) is the TPU analogue of the paper's disk page.
+
+Tiling: grid over n; the M (subspace) axis is kept whole per tile — M is a
+few dozen in practice (paper Table 4: 22..50), padded to the 128 lane width
+by the ops wrapper.  Queries are tiled along the lane axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(alpha_ref, sg_ref, qsum_ref, sd_ref, out_ref):
+    alpha = alpha_ref[...]              # (bn, M)
+    sg = sg_ref[...]                    # (bn, M)
+    qsum = qsum_ref[...]                # (1, bq)
+    sd = sd_ref[...]                    # (M, bq)
+    rowsum = jnp.sum(alpha, axis=-1, keepdims=True)          # (bn, 1)
+    cauchy = jnp.dot(sg, sd, preferred_element_type=jnp.float32)  # MXU
+    out_ref[...] = (rowsum + qsum + cauchy).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
+def bregman_ub_matrix(
+    alpha: jax.Array,        # (n, M)
+    sqrt_gamma: jax.Array,   # (n, M)
+    qsum: jax.Array,         # (q,)  sum over subspaces of qconst
+    sqrt_delta: jax.Array,   # (q, M)
+    *,
+    block_n: int = 512,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n, q) UB totals.  Pads n/q/M to tile multiples, strips after."""
+    n, m = alpha.shape
+    q = qsum.shape[0]
+    bn = min(block_n, max(8, n))
+    bq = min(block_q, max(1, q))
+    n_pad = -n % bn
+    q_pad = -q % bq
+    m_pad = -m % 128 if not interpret else 0
+
+    a = jnp.pad(alpha, ((0, n_pad), (0, m_pad)))
+    sg = jnp.pad(sqrt_gamma, ((0, n_pad), (0, m_pad)))
+    sd = jnp.pad(sqrt_delta, ((0, q_pad), (0, m_pad))).T      # (M, q)
+    qs = jnp.pad(qsum, (0, q_pad))[None, :]                   # (1, q)
+    np_, mp = a.shape
+    qp = qs.shape[1]
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(np_ // bn, qp // bq),
+        in_specs=[
+            pl.BlockSpec((bn, mp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, mp), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (0, j)),
+            pl.BlockSpec((mp, bq), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, qp), jnp.float32),
+        interpret=interpret,
+    )(a, sg, qs, sd)
+    return out[:n, :q]

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel — causal GQA flash attention (online softmax).
+
+Grid: (batch, q_heads, q_tiles, kv_tiles), kv innermost (sequential on TPU),
+with running max / denominator / output accumulator in VMEM scratch.
+Supports GQA (kv head = q head // rep via the k/v BlockSpec index maps),
+causal masking, sliding-window (local) attention, and decode-style
+end-aligned short query blocks (Sq < Skv).
+
+Used by the LM stack as the TPU target; the XLA path (models/attention.py
+chunked attention) is the portable fallback the dry-run compiles.  Note a
+production kernel would also skip fully-masked kv tiles via the index map;
+we keep the dense grid and mask (documented trade-off, §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(*, scale, causal, window, sq, skv, bq, bkv):
+    def kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref):
+        j = pl.program_id(3)
+        nj = pl.num_programs(3)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bkv, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        i = pl.program_id(2)
+        q_pos = (i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+                 + (skv - sq))                          # end-aligned
+        k_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = k_pos < skv                              # kv padding
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...], l_ref[...] = m_new, l_new
+
+        @pl.when(j == nj - 1)
+        def _finalize():
+            out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+            out_ref[0, 0] = out.astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "block_q", "block_kv", "interpret"))
+def flash_attention(
+    q: jax.Array,           # (B, H, Sq, D)
+    k: jax.Array,           # (B, KH, Skv, D)
+    v: jax.Array,           # (B, KH, Skv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    kh, skv = k.shape[1], k.shape[2]
+    assert h % kh == 0, "q heads must be a multiple of kv heads"
+    rep = h // kh
+    scale = float(scale) if scale is not None else 1.0 / float(d) ** 0.5
+
+    bq = min(block_q, max(8, sq))
+    bkv = min(block_kv, max(8, skv))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, -sq % bq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, -skv % bkv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, -skv % bkv), (0, 0)))
+    sqp, skvp = qp.shape[2], kp.shape[2]
+
+    kernel = _make_kernel(scale=scale, causal=causal, window=window,
+                          sq=sq, skv=skv, bq=bq, bkv=bkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, sqp // bq, skvp // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, i, j: (b_, h_ // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :sq, :]

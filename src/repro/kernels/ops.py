@@ -1,0 +1,92 @@
+"""Dispatching jit wrappers around the Pallas kernels.
+
+Backend policy (per DESIGN.md): on TPU the compiled Pallas kernels run; on
+CPU (this container) the pure-jnp references run by default so that jitted
+programs (including the 512-device dry-run) lower through stock XLA, and
+``impl='interpret'`` forces the Pallas interpreter for kernel validation.
+
+Set env ``REPRO_KERNEL_IMPL`` to 'pallas' | 'interpret' | 'ref' to override.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import bregman_ub as _ub
+from . import bregman_dist as _dist
+from . import pccp_corr as _corr
+from . import flash_attention as _flash
+
+
+def _impl(override: str | None = None) -> str:
+    if override:
+        return override
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# BrePartition filter + refine
+# ---------------------------------------------------------------------------
+
+def bregman_ub_filter(alpha, sqrt_gamma, qconst, sqrt_delta, impl=None):
+    """Total UBs for one query + a closure for the Alg.-4 kth components.
+
+    Returns (totals (n,), comp_of(kth) -> (M,)).
+    """
+    mode = _impl(impl)
+    if mode == "ref" or qconst.ndim != 1:
+        totals = ref.bregman_ub_totals(alpha, sqrt_gamma, qconst, sqrt_delta)
+    else:
+        qsum = jnp.sum(qconst)[None]
+        totals = _ub.bregman_ub_matrix(
+            alpha, sqrt_gamma, qsum, sqrt_delta[None, :],
+            interpret=(mode == "interpret"),
+        )[:, 0]
+
+    def comp_of(kth):
+        a = jnp.take(alpha, kth, axis=0)
+        sg = jnp.take(sqrt_gamma, kth, axis=0)
+        return a + qconst + sg * sqrt_delta
+
+    return totals, comp_of
+
+
+def bregman_ub_matrix(alpha, sqrt_gamma, qconst, sqrt_delta, impl=None):
+    """(n, q) UB totals for a query batch."""
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_ub_matrix(alpha, sqrt_gamma, qconst, sqrt_delta)
+    qsum = jnp.sum(qconst, axis=-1)
+    return _ub.bregman_ub_matrix(alpha, sqrt_gamma, qsum, sqrt_delta,
+                                 interpret=(mode == "interpret"))
+
+
+def bregman_refine(rows, grad, c_y, family: str, impl=None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_refine(rows, grad, c_y, family)
+    return _dist.bregman_refine(rows, grad, c_y, family,
+                                interpret=(mode == "interpret"))
+
+
+def pccp_correlation(x, impl=None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.pccp_correlation(x)
+    return _corr.pccp_correlation(x, interpret=(mode == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None, impl=None):
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.attention(q, k, v, causal=causal, window=window, scale=scale)
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, interpret=(mode == "interpret"))

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's signature; tests assert allclose between
+kernel (interpret=True on CPU) and these references across shape/dtype
+sweeps, and hypothesis drives the property tests on top of them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bregman import get_family
+
+Array = jax.Array
+
+
+def bregman_ub_totals(alpha: Array, sqrt_gamma: Array, qconst: Array,
+                      sqrt_delta: Array) -> Array:
+    """Total UB per point for a single query.  (n, M),(n, M),(M,),(M,)->(n,)."""
+    return (jnp.sum(alpha, -1) + jnp.sum(qconst, -1)
+            + sqrt_gamma @ sqrt_delta)
+
+
+def bregman_ub_matrix(alpha: Array, sqrt_gamma: Array, qconst: Array,
+                      sqrt_delta: Array) -> Array:
+    """UB totals for a query batch.  (n,M),(n,M),(q,M),(q,M) -> (n,q)."""
+    return (jnp.sum(alpha, -1)[:, None] + jnp.sum(qconst, -1)[None, :]
+            + sqrt_gamma @ sqrt_delta.T)
+
+
+def bregman_refine(rows: Array, grad: Array, c_y: Array, family: str) -> Array:
+    """Exact D_f for selected rows.  (b,d),(d,),() -> (b,)."""
+    fam = get_family(family)
+    fx = jnp.sum(fam.phi(rows), axis=-1)
+    return fx - rows @ grad + c_y
+
+
+def pccp_correlation(x: Array) -> Array:
+    """|Pearson| correlation matrix with zeroed diagonal.  (n,d) -> (d,d)."""
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    std = jnp.sqrt(jnp.mean(xc * xc, axis=0))
+    std = jnp.where(std < 1e-12, 1.0, std)
+    corr = (xc.T @ xc) / (x.shape[0] * std[:, None] * std[None, :])
+    corr = jnp.abs(corr)
+    return corr * (1.0 - jnp.eye(x.shape[1], dtype=x.dtype))
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window: int | None = None, scale: float | None = None) -> Array:
+    """Naive GQA attention oracle.
+
+    q: (B, H, Sq, D); k/v: (B, KH, Skv, D) with H % KH == 0.
+    ``window``: sliding-window size (local attention) if given.
+    """
+    b, h, sq, d = q.shape
+    kh = k.shape[1]
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    skv = k.shape[2]
+    qi = jnp.arange(sq)[:, None] + (skv - sq)   # align ends (decode offsets)
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,2 @@
+# Launch layer: production meshes, the multi-pod dry-run, the HLO cost
+# analyzer (trip-count-aware), training and serving launchers.

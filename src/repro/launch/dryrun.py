@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import — jax locks the
+# device count at first backend initialization (brief, MULTI-POD DRY-RUN).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without any TPU and without allocating a single
+parameter:
+
+  * the sharding contract is coherent (lower succeeds),
+  * the program partitions onto the production mesh (compile succeeds),
+  * it fits HBM (``memory_analysis`` per-device peak),
+  * and it yields the roofline inputs: trip-count-corrected HLO FLOPs /
+    bytes / per-collective volumes (launch/hlo_analysis.py) plus XLA's own
+    cost_analysis for cross-checking.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod --out dryrun.json
+    python -m repro.launch.dryrun --all --both-meshes --out dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, rules_name: str | None = None,
+             microbatches: int = 1) -> dict:
+    import jax
+    from repro import configs
+    from repro.dist import sharding as shd
+    from repro.launch import hlo_analysis as ha
+    from repro.launch import lowering
+    from repro.launch.mesh import make_production_mesh, mesh_chips
+    from repro.train.train_loop import TrainConfig
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = {"default": None, "serve": shd.SERVE_RULES,
+             "context": shd.CONTEXT_RULES,
+             "decode": shd.DECODE_RULES}.get(rules_name or "default")
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": mesh_chips(mesh), "ok": False,
+    }
+    t0 = time.time()
+    try:
+        lowered = lowering.lower_cell(
+            arch, shape_name, mesh, rules=rules,
+            train_cfg=TrainConfig(microbatches=microbatches))
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+        }
+        if configs.SHAPES[shape_name].kind != "train":
+            # XLA CPU emulates bf16 dots via f32 weight copies (2x bf16
+            # bytes of temp that do not exist on TPU) — report both raw and
+            # TPU-adjusted peaks.  Documented in EXPERIMENTS.md §Dry-run.
+            from repro.models.registry import build_model
+            bundle = build_model(configs.get_config(arch))
+            adj = 2 * lowering.serve_weight_bytes_per_device(bundle, mesh)
+            rec["memory"]["cpu_bf16_upcast_bytes"] = adj
+            rec["memory"]["peak_bytes_tpu_adjusted"] = max(
+                rec["memory"]["peak_bytes_est"] - adj,
+                rec["memory"]["argument_bytes"]
+                + rec["memory"]["output_bytes"]
+                - rec["memory"]["alias_bytes"])
+        xla_cost = compiled.cost_analysis()
+        rec["xla_cost"] = {k: xla_cost.get(k) for k in
+                           ("flops", "transcendentals", "bytes accessed")}
+
+        costs = ha.analyze_text(compiled.as_text())
+        rec["hlo"] = {
+            "flops_per_device": costs.flops,
+            "transcendentals_per_device": costs.transcendentals,
+            "bytes_per_device": costs.bytes,
+            "collective_bytes_per_device": costs.collective_bytes,
+            "collectives": ha.collective_summary(costs),
+            "unknown_loops": costs.unknown_loops,
+        }
+        rec["model_flops"] = lowering.analytic_model_flops(arch, shape_name)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, or comma-separated list (all shapes)")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-archs", default="",
+                    help="comma-separated archs to skip with --all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro import configs
+
+    cells = []
+    skip = set(a for a in args.skip_archs.split(",") if a)
+    if args.all:
+        for arch, shape, runnable, note in configs.arch_cells():
+            if arch in skip:
+                continue
+            if runnable:
+                cells.append((arch, shape))
+            else:
+                print(f"SKIP {arch} x {shape}: {note}", flush=True)
+    elif args.arch and not args.shape:
+        for a in args.arch.split(","):
+            for arch, shape, runnable, _n in configs.arch_cells():
+                if arch == a and runnable:
+                    cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    records = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, multi_pod, rules_name=args.rules,
+                           microbatches=args.microbatches)
+            status = "OK " if rec["ok"] else "FAIL"
+            peak = rec.get("memory", {}).get("peak_bytes_est", 0) / 2**30
+            print(f"{status} {rec['mesh']:>8} {arch:24s} {shape:12s} "
+                  f"lower={rec.get('lower_s', '-'):>6}s "
+                  f"compile={rec.get('compile_s', '-'):>7}s "
+                  f"peak/dev={peak:6.2f}GiB "
+                  f"{rec.get('error', '')}", flush=True)
+            records.append(rec)
+            if args.out:
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} cells compiled", flush=True)
+    return 0 if n_ok == len(records) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,404 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why not ``compiled.cost_analysis()``?  XLA's cost model counts a while-loop
+body ONCE — measured on this container: a scan of 8 identical matmuls
+reports 1/8 of the unrolled FLOPs.  Every production-sized model here scans
+over layers, so the roofline would be off by ~num_layers.  This analyzer
+parses the post-SPMD optimized HLO (``compiled.as_text()``), recovers each
+while loop's trip count, and multiplies body costs through — and, in the
+same pass, extracts per-collective byte volumes (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), which cost_analysis does
+not expose at all.
+
+Counting conventions follow xla::HloCostAnalysis so the numbers are
+comparable (validated against cost_analysis on unrolled modules in
+tests/test_hlo_analysis.py):
+
+* dot: 2 * prod(output shape) * prod(contraction dims)
+* elementwise arithmetic: 1 flop / element (transcendentals tracked
+  separately, like cost_analysis' "transcendentals" key)
+* reduce: 1 flop per reduced-away element
+* fusion: FLOPs of the fused computation's instructions; BYTES are the
+  fusion's operands+outputs (fusion internals live in registers/VMEM —
+  exactly the HBM-traffic model the memory roofline term wants)
+* while: (body + condition) * trip_count; trip count from the
+  ``known_trip_count`` backend_config XLA attaches after loop analysis,
+  else from the canonical ``compare(counter, constant)`` condition pattern,
+  else 1 (recorded in ``unknown_loops``).
+
+The module text is PER-DEVICE under SPMD, so all outputs are per-device
+values; the roofline multiplies/divides by chip counts explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2", "is-finite", "popcnt", "stochastic-convert",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "sine", "cosine", "tan", "power", "logistic",
+    "erf",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "get-dimension-size", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "copy-start", "copy-done",
+    "optimization-barrier",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{")
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([\w\-]+)\((.*)$")
+
+
+def _balanced_paren_end(text: str, start: int) -> int:
+    """Index of the ')' closing the '(' at ``start`` (-1 if unbalanced)."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return -1
+
+
+def _parse_shapes(text: str):
+    """All 'f32[256,128]' shapes in ``text`` -> [(dtype, [dims])]."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES and dtype not in ("token",):
+            continue
+        shape = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dtype, shape))
+    return out
+
+
+def _numel(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _bytes_of(parsed) -> float:
+    return float(sum(_numel(s) * _DTYPE_BYTES.get(dt, 0)
+                     for dt, s in parsed))
+
+
+def _balanced_braces(text: str, start: int) -> str:
+    """Return the {...} group starting at ``start`` with balanced braces."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    opcode: str
+    out: list                    # [(dtype, shape)]
+    operand_names: list
+    attrs_text: str
+    raw: str
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_in: float
+    bytes_out: float
+    multiplier: float            # product of enclosing trip counts
+    group_size: int
+    raw: str
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    collectives: list = dataclasses.field(default_factory=list)
+    unknown_loops: int = 0
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.bytes += other.bytes * mult
+        self.unknown_loops += other.unknown_loops
+        for c in other.collectives:
+            self.collectives.append(
+                dataclasses.replace(c, multiplier=c.multiplier * mult))
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.bytes_in * c.multiplier for c in self.collectives)
+
+
+def parse_computations(hlo_text: str):
+    """-> (comps: name -> [Instruction], entry_name)."""
+    comps: dict[str, list[Instruction]] = {}
+    entry = None
+    current = None
+    for line in hlo_text.splitlines():
+        if current is None:
+            if "{" in line and "->" in line:
+                m = _COMP_HEAD.match(line.strip())
+                if m:
+                    current = m.group(2)
+                    comps[current] = []
+                    if m.group(1):
+                        entry = current
+            continue
+        stripped = line.strip()
+        if stripped.startswith("}"):
+            current = None
+            continue
+        m = _INSTR_HEAD.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # output type: either a (tuple type ...) — possibly with /*index=N*/
+        # comments — or a single shape token
+        if rest.startswith("("):
+            end = _balanced_paren_end(rest, 0)
+            if end < 0:
+                continue
+            out_type, rest = rest[:end + 1], rest[end + 1:].lstrip()
+        else:
+            sp = rest.find(" ")
+            if sp < 0:
+                continue
+            out_type, rest = rest[:sp], rest[sp + 1:].lstrip()
+        m2 = _OPCODE_RE.match(rest)
+        if not m2:
+            continue
+        opcode, tail = m2.groups()
+        # split call args from attrs at the balanced close paren
+        args_end = _balanced_paren_end("(" + tail, 0) - 1
+        if args_end < 0:
+            args_end = len(tail)
+        args = tail[:args_end]
+        attrs_text = tail[args_end + 1:]
+        comps[current].append(Instruction(
+            name=name, opcode=opcode, out=_parse_shapes(out_type),
+            operand_names=re.findall(r"%([\w\.\-]+)", args),
+            attrs_text=attrs_text, raw=stripped))
+    return comps, entry
+
+
+def _called(instr: Instruction, key: str) -> str | None:
+    m = re.search(key + r"=%([\w\.\-]+)", instr.attrs_text)
+    return m.group(1) if m else None
+
+
+def _calls_list(instr: Instruction) -> list[str]:
+    out = []
+    for key in ("calls", "to_apply", "body", "condition"):
+        m = re.search(key + r"=(%[\w\.\-]+|\{[^}]*\})", instr.attrs_text)
+        if m:
+            out.extend(re.findall(r"%([\w\.\-]+)", m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.attrs_text)
+    if m:
+        out.extend(re.findall(r"%([\w\.\-]+)", m.group(1)))
+    return out
+
+
+def _trip_count(instr: Instruction, comps) -> int | None:
+    bi = instr.attrs_text.find("backend_config=")
+    if bi >= 0:
+        brace = instr.attrs_text.find("{", bi)
+        if brace >= 0:
+            try:
+                cfg = json.loads(_balanced_braces(instr.attrs_text, brace))
+                n = cfg.get("known_trip_count", {}).get("n")
+                if n is not None:
+                    return int(n)
+            except (ValueError, TypeError):
+                pass
+    cond = _called(instr, "condition")
+    if cond and cond in comps:
+        const_val, direction = None, None
+        for ci in comps[cond]:
+            cm = re.search(r"constant\((-?\d+)\)", ci.raw)
+            if cm and ci.opcode == "constant":
+                const_val = int(cm.group(1))
+            dm = re.search(r"direction=(\w+)", ci.attrs_text)
+            if dm:
+                direction = dm.group(1)
+        if const_val is not None and direction in ("LT", "NE", "GT"):
+            return max(abs(const_val), 1)
+    return None
+
+
+def _group_size(instr: Instruction) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.attrs_text)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", instr.attrs_text)
+    if m:
+        return len(m.group(1).split(","))
+    return 0
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_computations(hlo_text)
+        # symbol tables: comp -> instr name -> out shapes
+        self.symtab = {
+            cname: {i.name: i.out for i in instrs}
+            for cname, instrs in self.comps.items()}
+        self._memo: dict[str, Costs] = {}
+
+    def analyze(self) -> Costs:
+        if self.entry is None:
+            return Costs()
+        total = Costs()
+        total.add(self._comp_costs(self.entry, top_level=True))
+        return total
+
+    def _operands(self, comp: str, instr: Instruction):
+        tab = self.symtab[comp]
+        out = []
+        for n in instr.operand_names:
+            out.extend(tab.get(n, []))
+        return out
+
+    # -- per-computation ------------------------------------------------------
+    def _comp_costs(self, name: str, top_level: bool) -> Costs:
+        key = f"{name}::{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        costs = Costs()
+        self._memo[key] = costs       # break cycles defensively
+        for instr in self.comps.get(name, []):
+            self._instr_costs(name, instr, costs, top_level)
+        return costs
+
+    def _instr_costs(self, comp: str, instr: Instruction, costs: Costs,
+                     top_level: bool):
+        op = instr.opcode
+        if op in _ZERO_COST:
+            return
+        out_elems = sum(_numel(s) for _, s in instr.out)
+        operands = self._operands(comp, instr)
+
+        if op == "while":
+            trip = _trip_count(instr, self.comps)
+            if trip is None:
+                trip = 1
+                costs.unknown_loops += 1
+            for key in ("body", "condition"):
+                sub = _called(instr, key)
+                if sub and sub in self.comps:
+                    costs.add(self._comp_costs(sub, top_level), mult=trip)
+            return
+
+        if op == "conditional":
+            branches = [c for c in _calls_list(instr) if c in self.comps]
+            if branches:
+                best = max((self._comp_costs(b, top_level) for b in branches),
+                           key=lambda c: c.flops + c.bytes)
+                costs.add(best)
+            return
+
+        if op in ("call", "async-start"):
+            for c in _calls_list(instr):
+                if c in self.comps:
+                    costs.add(self._comp_costs(c, top_level))
+            return
+
+        if op == "fusion":
+            for c in _calls_list(instr):
+                if c in self.comps:
+                    sub = self._comp_costs(c, top_level=False)
+                    costs.flops += sub.flops
+                    costs.transcendentals += sub.transcendentals
+                    costs.collectives.extend(sub.collectives)
+            if top_level:
+                costs.bytes += _bytes_of(operands) + _bytes_of(instr.out)
+            return
+
+        if op in _COLLECTIVES:
+            kind = op.replace("-start", "")
+            costs.collectives.append(CollectiveOp(
+                kind=kind, bytes_in=_bytes_of(operands),
+                bytes_out=_bytes_of(instr.out), multiplier=1.0,
+                group_size=_group_size(instr), raw=instr.raw[:200]))
+            if top_level:
+                costs.bytes += _bytes_of(operands) + _bytes_of(instr.out)
+            return
+
+        # -- plain compute ops -------------------------------------------------
+        if op == "dot":
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}",
+                          instr.attrs_text)
+            if m and operands:
+                lhs_shape = operands[0][1]
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(lhs_shape):
+                        contract *= lhs_shape[d]
+            costs.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            k_elems = _numel(operands[1][1]) if len(operands) > 1 else 1
+            out_feat = instr.out[0][1][-1] if instr.out and instr.out[0][1] else 1
+            costs.flops += 2.0 * out_elems * max(k_elems // max(out_feat, 1), 1)
+        elif op in ("reduce", "reduce-window"):
+            in_elems = _numel(operands[0][1]) if operands else 0
+            costs.flops += float(max(in_elems - out_elems, 0))
+        elif op in _TRANSCENDENTAL:
+            costs.transcendentals += float(out_elems)
+        elif op in _ELEMENTWISE:
+            costs.flops += float(out_elems)
+        # everything else (data movement, custom-call, sort, rng): 0 flops
+
+        if top_level:
+            costs.bytes += _bytes_of(operands) + _bytes_of(instr.out)
+
+
+def analyze_text(hlo_text: str) -> Costs:
+    return HloAnalyzer(hlo_text).analyze()
+
+
+def collective_summary(costs: Costs) -> dict[str, dict]:
+    """Aggregate collectives by kind: count, per-device bytes."""
+    agg: dict[str, dict] = defaultdict(lambda: {"count": 0.0, "bytes_in": 0.0,
+                                                "bytes_out": 0.0})
+    for c in costs.collectives:
+        a = agg[c.kind]
+        a["count"] += c.multiplier
+        a["bytes_in"] += c.bytes_in * c.multiplier
+        a["bytes_out"] += c.bytes_out * c.multiplier
+    return dict(agg)

@@ -1,0 +1,197 @@
+"""AOT lowering of every (arch x shape x mesh) cell — shared by the dry-run
+CLI, the roofline benchmarks and the perf-iteration harness.
+
+Each cell lowers ONE program:
+
+    train_4k     -> train_step (fwd + bwd + AdamW update, donated state)
+    prefill_32k  -> prefill    (populate caches, return hidden + caches)
+    decode_32k   -> decode_step (1 token against a seq_len cache, donated)
+    long_500k    -> decode_step (sub-quadratic archs only)
+
+All inputs are ShapeDtypeStructs — nothing allocates.  Serving params are
+bf16 (production serving dtype) and shard over `model` only (SERVE_RULES);
+training params are f32 and shard fsdp x model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs.common import SHAPES, ShapeSpec, batch_axes, batch_structs
+from repro.dist import sharding as shd
+from repro.models.registry import ModelBundle, build_model
+from repro.train.train_loop import TrainConfig, lower_train_step
+
+
+def serve_param_structs(bundle: ModelBundle):
+    """bf16 serving weights (norm scales stay f32 for numerics)."""
+    def cast(s):
+        if s.dtype == jnp.float32 and len(s.shape) >= 2:
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, bundle.param_structs())
+
+
+def cache_structs_for(bundle: ModelBundle, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len))
+
+
+def _cache_shardings(bundle, shape, mesh, rules):
+    axes = bundle.cache_axes()
+    structs = cache_structs_for(bundle, shape)
+    return shd.tree_shardings_for_structs(axes, structs, mesh, rules)
+
+
+def _batch_shardings(bundle, shape, mesh, rules):
+    return shd.tree_shardings_for_structs(
+        batch_axes(bundle, shape), batch_structs(bundle, shape), mesh, rules)
+
+
+def _serve_param_shardings(bundle, mesh, rules):
+    return shd.tree_shardings_for_structs(
+        bundle.param_axes(), bundle.param_structs(), mesh, rules)
+
+
+def lower_prefill(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                  rules=None):
+    rules = rules or shd.SERVE_RULES
+    p_structs = serve_param_structs(bundle)
+    p_sh = _serve_param_shardings(bundle, mesh, rules)
+    b_structs = {k: v for k, v in batch_structs(bundle, shape).items()
+                 if k != "lengths"}
+    b_sh = {k: v for k, v in
+            _batch_shardings(bundle, shape, mesh, rules).items()
+            if k != "lengths"}
+    c_structs = cache_structs_for(bundle, shape)
+    c_sh = _cache_shardings(bundle, shape, mesh, rules)
+    len_struct = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    len_sh = NamedSharding(mesh, P())
+    hidden_sh = shd.spec_for_shape(
+        ("batch", "seq", None),
+        (shape.global_batch, shape.seq_len, bundle.cfg.d_model), mesh, rules)
+
+    def wrapped(params, batch, caches, lengths):
+        with shd.activation_rules(mesh, rules):
+            return bundle.prefill(params, batch, caches, lengths)
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_sh, b_sh, c_sh, len_sh),
+        out_shardings=(NamedSharding(mesh, hidden_sh), c_sh),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        return fn.lower(p_structs, b_structs, c_structs, len_struct)
+
+
+def lower_decode(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                 rules=None):
+    rules = rules or shd.SERVE_RULES
+    p_structs = serve_param_structs(bundle)
+    p_sh = _serve_param_shardings(bundle, mesh, rules)
+    b = shape.global_batch
+    bs = batch_structs(bundle, shape)
+    tok_struct, pos_struct = bs["tokens"], bs["positions"]
+    bsh = _batch_shardings(bundle, shape, mesh, rules)
+    tok_sh, pos_sh = bsh["tokens"], bsh["positions"]
+    c_structs = cache_structs_for(bundle, shape)
+    c_sh = _cache_shardings(bundle, shape, mesh, rules)
+    len_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+    len_sh = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, shd.spec_for_shape(
+        ("batch", "vocab"), (b, bundle.cfg.vocab_size), mesh, rules))
+    hidden_sh = NamedSharding(mesh, shd.spec_for_shape(
+        ("batch", None), (b, bundle.cfg.d_model), mesh, rules))
+
+    def wrapped(params, token, positions, caches, lengths):
+        with shd.activation_rules(mesh, rules):
+            return bundle.decode_step(params, token, positions, caches,
+                                      lengths)
+
+    fn = jax.jit(
+        wrapped,
+        in_shardings=(p_sh, tok_sh, pos_sh, c_sh, len_sh),
+        out_shardings=(logits_sh, hidden_sh, c_sh),
+        donate_argnums=(3,),
+    )
+    with mesh:
+        return fn.lower(p_structs, tok_struct, pos_struct, c_structs,
+                        len_struct)
+
+
+def lower_train(bundle: ModelBundle, mesh: Mesh, shape: ShapeSpec,
+                rules=None, train_cfg: TrainConfig | None = None):
+    cfg = train_cfg or TrainConfig()
+    return lower_train_step(bundle, mesh, cfg, shape,
+                            batch_structs(bundle, shape), rules)
+
+
+def lower_cell(arch: str, shape_name: str, mesh: Mesh, rules=None,
+               overrides: dict | None = None,
+               train_cfg: TrainConfig | None = None,
+               config=None, shape: ShapeSpec | None = None):
+    """One dry-run cell -> jax Lowered.
+
+    ``config``/``shape`` override the registry lookups (reduced-config
+    smoke tests on small meshes).
+    """
+    shape = shape or SHAPES[shape_name]
+    cfg = config if config is not None else configs.get_config(
+        arch, **(overrides or {}))
+    bundle = build_model(cfg)
+    if shape.kind == "train":
+        return lower_train(bundle, mesh, shape, rules, train_cfg)
+    if shape.kind == "prefill":
+        return lower_prefill(bundle, mesh, shape, rules)
+    return lower_decode(bundle, mesh, shape, rules)
+
+
+def serve_weight_bytes_per_device(bundle: ModelBundle, mesh: Mesh,
+                                  rules=None) -> int:
+    """Per-device bytes of the bf16 serving weights (for the documented
+    CPU-backend adjustment: XLA CPU emulates bf16 dots by materializing f32
+    copies of the weight operands — 2x these bytes of temp that do NOT
+    exist on TPU; see EXPERIMENTS.md §Dry-run)."""
+    rules = rules or shd.SERVE_RULES
+    structs = serve_param_structs(bundle)
+    shardings = shd.tree_shardings_for_structs(
+        bundle.param_axes(), bundle.param_structs(), mesh, rules)
+    total = 0
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for s, sh in zip(jax.tree.leaves(structs), jax.tree.leaves(shardings)):
+        if s.dtype != jnp.bfloat16:
+            continue
+        n = 1
+        for d in s.shape:
+            n *= d
+        denom = 1
+        for ax in jax.tree.leaves(tuple(sh.spec)):
+            if isinstance(ax, str):
+                denom *= axis_sizes[ax]
+        total += n * 2 // denom
+    return total
+
+
+def analytic_model_flops(arch: str, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = step tokens.
+
+    Serving steps: prefill processes B*S tokens with the 2*N forward only
+    (no backward => 2*N*D); decode processes B tokens.
+    """
+    shape = SHAPES[shape_name]
+    bundle = build_model(configs.get_config(arch))
+    n_active = bundle.active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch

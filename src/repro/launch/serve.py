@@ -1,0 +1,69 @@
+"""Serving launcher: batched engine, optional kNN-LM retrieval.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b \
+        --reduced --requests 8 --knnlm
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.registry import build_model
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.serve.knnlm import KNNLMHook, build_datastore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--knnlm", action="store_true")
+    ap.add_argument("--knnlm-approx-p", type=float, default=None)
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    vocab = cfg.vocab_size
+    rng = np.random.default_rng(0)
+
+    hook = None
+    if args.knnlm:
+        corpus = rng.integers(1, vocab, (8, 2 * args.prompt_len))
+        store = build_datastore(bundle, params, corpus)
+        hook = KNNLMHook(store=store, k=8, lam=0.25,
+                         approx_p=args.knnlm_approx_p)
+        print(f"kNN-LM datastore: {store.index.n} keys, "
+              f"M={store.index.m} subspaces")
+
+    eng = Engine(bundle, params,
+                 EngineConfig(slots=args.slots,
+                              max_seq=args.prompt_len + args.new_tokens + 8,
+                              prefill_len=args.prompt_len),
+                 logits_hook=hook)
+    for uid in range(args.requests):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(1, vocab, args.prompt_len),
+                           max_new_tokens=args.new_tokens))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    total_tokens = sum(len(r.output) for r in done)
+    print(f"{len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
+          f"({total_tokens/dt:.1f} tok/s, {eng.ticks} ticks)")
+    if hook:
+        print(f"kNN queries served: {hook.queries_served}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Training launcher: real run on whatever devices exist.
+
+On this CPU container it trains CPU-sized configs (see
+examples/train_lm.py for the end-to-end driver); on a pod the same entry
+point runs the full config on the production mesh — the mesh/shape logic
+is identical, only device count differs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.common import ShapeSpec
+from repro.data.pipeline import TokenStreamConfig, token_batch
+from repro.models.registry import build_model
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptimizerConfig
+from repro.train.straggler import StragglerMonitor
+from repro.train.train_loop import (TrainConfig, init_train_state,
+                                    make_train_step)
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    bundle = build_model(cfg)
+    print(f"{args.arch}: {bundle.count_params/1e6:.1f}M params "
+          f"({bundle.active_params/1e6:.1f}M active)")
+
+    mesh = make_host_mesh()
+    shape = ShapeSpec("train", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+    tc = TrainConfig(
+        microbatches=args.microbatches, loss_chunk=min(512, args.seq),
+        opt=OptimizerConfig(peak_lr=args.lr, warmup_steps=args.steps // 10,
+                            total_steps=args.steps))
+    stream = TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               global_batch=args.batch)
+    mrope = bool(getattr(cfg, "mrope_section", None))
+
+    with mesh:
+        step_fn = make_train_step(bundle, mesh, tc, shape)
+        start = (ckpt.latest_step(args.ckpt_dir)
+                 if args.ckpt_dir else None)
+        state = init_train_state(bundle, mesh, jax.random.PRNGKey(0))
+        if start is not None:
+            structs = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state = ckpt.restore_checkpoint(args.ckpt_dir, start, structs)
+            print(f"resumed from step {start}")
+        start = start or 0
+
+        mon = StragglerMonitor()
+        t0 = time.time()
+        for i in range(start, args.steps):
+            mon.start_step()
+            batch = token_batch(stream, i, mesh, mrope=mrope)
+            for name, (shape_fn, dtype, _ax) in bundle.extra_inputs.items():
+                batch[name] = jax.numpy.zeros(
+                    shape_fn(args.batch, args.seq), dtype)
+            state, metrics = step_fn(state, batch)
+            mon.end_step()
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                ckpt.save_checkpoint(args.ckpt_dir, i + 1, state)
+            if i % 10 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                      f"acc={float(metrics['accuracy']):.3f}")
+        dt = time.time() - t0
+        print(f"{args.steps - start} steps in {dt:.1f}s; "
+              f"straggler: {mon.summary()}")
+
+
+if __name__ == "__main__":
+    main()

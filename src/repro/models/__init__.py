@@ -1,0 +1,3 @@
+# LM substrate for the assigned architectures: layers, attention variants,
+# MoE, linear-recurrence mixers (RG-LRU, RWKV-6), decoder-only / enc-dec
+# model assembly, and the config registry.

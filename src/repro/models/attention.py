@@ -1,0 +1,288 @@
+"""GQA attention: projections, chunked-flash SDPA, and KV-cache decode.
+
+Three execution regimes, one semantics (oracle: kernels/ref.attention):
+
+* ``sdpa_dense``   — materializes (…, Sq, Skv) logits.  Used for short
+  sequences (tests, smoke configs) where the quadratic buffer is trivial.
+* ``sdpa_chunked`` — flash-attention semantics in pure jnp: python-unrolled
+  q/kv chunk loops with online softmax and a remat'd chunk body.  No scan →
+  the compiled HLO carries every chunk's FLOPs, so ``cost_analysis()`` on
+  the dry-run counts attention exactly (lax.scan bodies are counted ONCE by
+  XLA's cost model — measured, see EXPERIMENTS.md §Dry-run), and the peak
+  buffer is (…, q_chunk, kv_chunk).
+* ``decode_attend`` — single-step decode against a (B, S_max, KH, D) cache;
+  dense over the cache (the kv_seq axis may be sharded over `model`; the
+  softmax reductions then turn into tiny all-reduces under SPMD).
+
+On TPU the Pallas kernel (kernels/flash_attention.py) replaces sdpa_chunked
+via kernels/ops.flash_attention dispatch; shapes/layout match.
+
+Layout: activations (B, S, H, D); grouped-query handled without repeating
+KV — q is reshaped to (B, S, KH, G, D) and logits einsums carry the group
+axis, so KV stays at KH heads in memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+
+from .layers import Spec, apply_rope, rms_norm
+
+Array = jax.Array
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_spec(d: int, heads: int, kv_heads: int, head_dim: int,
+                   qkv_bias: bool = False, qk_norm: bool = False,
+                   out_bias: bool = False) -> dict:
+    spec = {
+        "wq": Spec((d, heads, head_dim), ("fsdp", "heads", "head_dim")),
+        "wk": Spec((d, kv_heads, head_dim), ("fsdp", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv_heads, head_dim), ("fsdp", "kv_heads", "head_dim")),
+        "wo": Spec((heads, head_dim, d), ("heads", "head_dim", "fsdp")),
+    }
+    if qkv_bias:
+        spec["bq"] = Spec((heads, head_dim), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = Spec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = Spec((kv_heads, head_dim), ("kv_heads", "head_dim"), init="zeros")
+    if out_bias:
+        spec["bo"] = Spec((d,), ("embed",), init="zeros")
+    if qk_norm:
+        spec["q_norm"] = Spec((head_dim,), ("head_dim",), init="ones")
+        spec["k_norm"] = Spec((head_dim,), ("head_dim",), init="ones")
+    return spec
+
+
+def qkv_project(p: dict, x: Array, *, positions: Array, rope_theta: float,
+                mrope_section=None, use_rope: bool = True):
+    """x (B,S,D) -> q (B,S,H,hd), k/v (B,S,KH,hd), with bias/qk-norm/rope."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if "q_norm" in p:  # per-head RMS norm (Qwen3)
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta, mrope_section)
+        k = apply_rope(k, positions, rope_theta, mrope_section)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def out_project(p: dict, attn: Array) -> Array:
+    out = jnp.einsum("bshk,hkd->bsd", attn, p["wo"].astype(attn.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(attn.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SDPA — dense (short sequences)
+# ---------------------------------------------------------------------------
+
+def _grouped(q: Array, kv_heads: int) -> Array:
+    """(B,S,H,D) -> (B,S,KH,G,D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, d)
+
+
+def sdpa_dense(q: Array, k: Array, v: Array, *, causal: bool = True,
+               window: int | None = None, q_offset: Array | int = 0,
+               kv_len: Array | None = None) -> Array:
+    """Reference-shaped attention with full logits. q (B,Sq,H,D), k/v (B,Skv,KH,D).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+    ``kv_len``: per-batch valid cache length (B,) — None means all valid.
+    """
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    qg = _grouped(q, kh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    qi = jnp.arange(sq)[:, None] + q_offset                # (Sq, Skv) abs pos
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= (qi - ki) < window
+    mask = mask[None, None, None]
+    if kv_len is not None:
+        mask = mask & (ki[None] < kv_len[:, None, None])[:, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# SDPA — chunked flash (long sequences; python-unrolled, remat'd body)
+# ---------------------------------------------------------------------------
+
+def _flash_chunk(qg, kj, vj, acc, m, l, qpos, kpos, causal, window, scale):
+    """Online-softmax update for one (q_chunk, kv_chunk) tile.
+
+    qg (B,Cq,KH,G,D); kj/vj (B,Ck,KH,D); acc (B,Cq,KH,G,D) f32;
+    m/l (B,Cq,KH,G) f32; qpos (Cq,), kpos (Ck,) absolute positions.
+    """
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kj,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p.astype(qg.dtype), vj,
+        preferred_element_type=jnp.float32)
+    return acc_new, m_new, l_new
+
+
+def sdpa_chunked(q: Array, k: Array, v: Array, *, causal: bool = True,
+                 window: int | None = None, q_offset: int = 0,
+                 q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """Flash-semantics SDPA; peak buffer (B, q_chunk, H, kv_chunk) per tile.
+
+    Python-unrolled over chunk tiles (exact cost_analysis, static shapes);
+    the tile body is remat'd so backward recomputes p instead of saving it.
+    Fully-masked tiles (outside causal/window reach) are skipped at trace
+    time — the same work-skipping a Pallas grid would do.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kh = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nk = -(-skv // kv_chunk)
+    scale = d ** -0.5
+    qg = _grouped(q, kh)
+    chunk_fn = jax.checkpoint(functools.partial(
+        _flash_chunk, causal=causal, window=window, scale=scale))
+
+    outs = []
+    for i in range(nq):
+        q0, q1 = i * q_chunk, min((i + 1) * q_chunk, sq)
+        qi = qg[:, q0:q1]
+        cq = q1 - q0
+        qpos = jnp.arange(q0, q1) + q_offset
+        acc = jnp.zeros((b, cq, kh, h // kh, d), jnp.float32)
+        m = jnp.full((b, cq, kh, h // kh), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, cq, kh, h // kh), jnp.float32)
+        for j in range(nk):
+            k0, k1 = j * kv_chunk, min((j + 1) * kv_chunk, skv)
+            # trace-time tile skipping (static positions)
+            lo_q, hi_q = q0 + q_offset, q1 - 1 + q_offset
+            if causal and k0 > hi_q:
+                continue
+            if window is not None and (k1 - 1) < lo_q - window + 1:
+                continue
+            acc, m, l = chunk_fn(qi, k[:, k0:k1], v[:, k0:k1], acc, m, l,
+                                 qpos, jnp.arange(k0, k1))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.reshape(b, cq, h, d).astype(q.dtype))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def sdpa(q: Array, k: Array, v: Array, *, causal: bool = True,
+         window: int | None = None, q_offset: int = 0,
+         dense_threshold: int = 2048, q_chunk: int = 512,
+         kv_chunk: int = 1024) -> Array:
+    """Dispatch: dense for small Sq*Skv, chunked flash otherwise.
+
+    Chunk sizes scale with sequence length (>= S/16 x S/8) so the python-
+    unrolled tile grid stays ~O(100) bodies — a 32k prefill at fixed
+    512x1024 tiles would emit ~2k tile bodies per layer and blow compile
+    time (observed: whisper prefill_32k hung XLA for >10 min).
+    """
+    if q.shape[1] * k.shape[1] <= dense_threshold * dense_threshold:
+        return sdpa_dense(q, k, v, causal=causal, window=window,
+                          q_offset=q_offset)
+    q_chunk = max(q_chunk, -(-q.shape[1] // 8))
+    kv_chunk = max(kv_chunk, -(-k.shape[1] // 8))
+    return sdpa_chunked(q, k, v, causal=causal, window=window,
+                        q_offset=q_offset, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array  # (B, S_max, KH, D)
+    v: Array  # (B, S_max, KH, D)
+
+    @staticmethod
+    def zeros(b: int, s_max: int, kh: int, d: int, dtype=jnp.bfloat16):
+        z = jnp.zeros((b, s_max, kh, d), dtype)
+        return KVCache(k=z, v=z)
+
+    @staticmethod
+    def axes():
+        ax = ("batch", "kv_seq", "kv_heads", "head_dim")
+        return KVCache(k=ax, v=ax)
+
+
+def cache_update(cache: KVCache, k_new: Array, v_new: Array,
+                 lengths: Array) -> KVCache:
+    """Write S_new steps at per-sequence offsets ``lengths`` (B,) int32.
+
+    One-hot matmul scatter: TPU-friendly (no data-dependent dynamic slices
+    across a sharded kv_seq axis), works for prefill (lengths=0, S_new=S)
+    and decode (S_new=1) alike.
+    """
+    b, s_new = k_new.shape[:2]
+    s_max = cache.k.shape[1]
+    # positions each new step lands at: (B, S_new)
+    tgt = lengths[:, None] + jnp.arange(s_new)[None, :]
+    oh = jax.nn.one_hot(tgt, s_max, dtype=cache.k.dtype)   # (B, S_new, S_max)
+    keep = 1.0 - jnp.sum(oh, axis=1)                       # (B, S_max)
+    k = cache.k * keep[..., None, None] + jnp.einsum(
+        "bns,bnhd->bshd", oh, k_new.astype(cache.k.dtype))
+    v = cache.v * keep[..., None, None] + jnp.einsum(
+        "bns,bnhd->bshd", oh, v_new.astype(cache.v.dtype))
+    return KVCache(k=k, v=v)
+
+
+def decode_attend(q: Array, cache: KVCache, lengths: Array, *,
+                  window: int | None = None) -> Array:
+    """One-token attention over the cache.  q (B,1,H,D); lengths (B,) is the
+    number of valid cache entries INCLUDING the new token already written."""
+    b, _, h, d = q.shape
+    kh = cache.k.shape[2]
+    qg = _grouped(q, kh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache.k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * (d ** -0.5)
+    ki = jnp.arange(cache.k.shape[1])[None, :]             # (1, S_max)
+    mask = ki < lengths[:, None]
+    if window is not None:
+        mask &= ki >= (lengths[:, None] - window)
+    logits = jnp.where(mask[:, None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cache.v.astype(q.dtype))
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,248 @@
+"""Encoder–decoder transformer (Whisper backbone; audio frontend stubbed).
+
+Per the brief, ``[audio]`` entries specify the transformer BACKBONE only:
+``input_specs()`` provides precomputed log-mel **frame embeddings**
+(B, F, d_model) in place of the conv1d/stride-2 frontend (stub documented in
+DESIGN.md §Arch-applicability).  Whisper-tiny: 4 encoder + 4 decoder layers,
+LayerNorm, GeLU MLPs, MHA (kv = heads), sinusoidal encoder positions,
+learned decoder positions, no RoPE.
+
+Decode serving caches both the decoder self-attention KV *and* the
+cross-attention KV (computed once from the encoder output at prefill).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from . import attention as attn_mod
+from .attention import KVCache
+from .layers import (Spec, apply_mlp, apply_norm, axes_tree, embed_lookup,
+                     embed_spec, init_tree, mlp_spec, norm_spec,
+                     sinusoidal_positions, struct_tree, unembed_logits)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    encoder_layers: int
+    decoder_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    num_frames: int = 1500            # encoder sequence length (stub output)
+    act: str = "gelu"
+    norm: str = "layernorm"
+    max_position: int = 1 << 16
+    compute_dtype: Any = jnp.bfloat16
+    dense_attn_threshold: int = 2048
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    remat: bool = True
+    scan_layers: bool = False          # 4+4 layers: unrolled
+    tie_embeddings: bool = True
+
+    @property
+    def num_layers(self) -> int:       # uniform accessor for tooling
+        return self.encoder_layers + self.decoder_layers
+
+
+def _attn_spec(cfg: EncDecConfig) -> dict:
+    return attn_mod.attention_spec(cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   qkv_bias=True, out_bias=True)
+
+
+def param_specs(cfg: EncDecConfig) -> dict:
+    enc_layer = lambda: {
+        "norm1": norm_spec(cfg.d_model, cfg.norm),
+        "attn": _attn_spec(cfg),
+        "norm2": norm_spec(cfg.d_model, cfg.norm),
+        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
+    }
+    dec_layer = lambda: {
+        "norm1": norm_spec(cfg.d_model, cfg.norm),
+        "self_attn": _attn_spec(cfg),
+        "norm_x": norm_spec(cfg.d_model, cfg.norm),
+        "cross_attn": _attn_spec(cfg),
+        "norm2": norm_spec(cfg.d_model, cfg.norm),
+        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
+    }
+    return {
+        "embed": embed_spec(cfg.vocab_size, cfg.d_model),
+        "dec_pos": Spec((cfg.max_position, cfg.d_model), (None, "fsdp"),
+                        scale=0.02),
+        "encoder": [enc_layer() for _ in range(cfg.encoder_layers)],
+        "enc_final_norm": norm_spec(cfg.d_model, cfg.norm),
+        "decoder": [dec_layer() for _ in range(cfg.decoder_layers)],
+        "dec_final_norm": norm_spec(cfg.d_model, cfg.norm),
+    }
+
+
+def _self_attention(cfg, p, x, positions, causal, cache=None, lengths=None,
+                    window=None):
+    q, k, v = attn_mod.qkv_project(p, x, positions=positions,
+                                   rope_theta=1e4, use_rope=False)
+    if cache is None:
+        out = attn_mod.sdpa(q, k, v, causal=causal,
+                            dense_threshold=cfg.dense_attn_threshold)
+        new_cache = None
+    elif x.shape[1] == 1:
+        cache = attn_mod.cache_update(cache, k, v, lengths)
+        out = attn_mod.decode_attend(q, cache, lengths + 1, window=window)
+        new_cache = cache
+    else:
+        out = attn_mod.sdpa(q, k, v, causal=causal,
+                            dense_threshold=cfg.dense_attn_threshold)
+        new_cache = attn_mod.cache_update(cache, k, v, lengths)
+    return attn_mod.out_project(p, out), new_cache
+
+
+def _cross_attention(cfg, p, x, enc_out=None, kv_cache: KVCache | None = None):
+    """Cross attention; KV from enc_out (train) or the fixed cache (decode)."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt)) + p["bq"].astype(dt)
+    if kv_cache is None:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt)) + p["bk"].astype(dt)
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt)) + p["bv"].astype(dt)
+    else:
+        k, v = kv_cache.k.astype(dt), kv_cache.v.astype(dt)
+    out = attn_mod.sdpa_dense(q, k, v, causal=False)
+    return attn_mod.out_project(p, out), KVCache(k=k, v=v)
+
+
+def encode(cfg: EncDecConfig, params: dict, frames: Array) -> Array:
+    """frames (B, F, d_model) — stub frontend output. Returns (B, F, D)."""
+    dt = cfg.compute_dtype
+    x = frames.astype(dt) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(dt)[None]
+    x = constrain(x, ("batch", "seq", "embed"))
+    dummy_pos = jnp.zeros(frames.shape[:2], jnp.int32)
+    for lp in params["encoder"]:
+        def block(lp, x):
+            h, _ = _self_attention(cfg, lp["attn"],
+                                   apply_norm(lp["norm1"], x, cfg.norm),
+                                   dummy_pos, causal=False)
+            x = x + h
+            x = x + apply_mlp(lp["mlp"],
+                              apply_norm(lp["norm2"], x, cfg.norm), cfg.act)
+            return x
+        x = jax.checkpoint(block)(lp, x) if cfg.remat else block(lp, x)
+        x = constrain(x, ("batch", "seq", "embed"))
+    return apply_norm(params["enc_final_norm"], x, cfg.norm)
+
+
+def _decoder_layer(cfg, lp, x, positions, enc_out, self_cache, cross_cache,
+                   lengths):
+    h, new_self = _self_attention(cfg, lp["self_attn"],
+                                  apply_norm(lp["norm1"], x, cfg.norm),
+                                  positions, causal=True,
+                                  cache=self_cache, lengths=lengths)
+    x = x + h
+    h, new_cross = _cross_attention(cfg, lp["cross_attn"],
+                                    apply_norm(lp["norm_x"], x, cfg.norm),
+                                    enc_out=enc_out, kv_cache=cross_cache)
+    x = x + h
+    x = x + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], x, cfg.norm), cfg.act)
+    return x, new_self, new_cross
+
+
+def forward_train(cfg: EncDecConfig, params: dict, tokens: Array,
+                  positions: Array, frames: Array):
+    """Teacher-forced decoder over encoded frames -> (hidden, aux=0)."""
+    enc_out = encode(cfg, params, frames)
+    dt = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dt)
+    pos = positions if positions.ndim == 2 else positions[..., 0]
+    x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+    for lp in params["decoder"]:
+        def block(lp, x):
+            y, _, _ = _decoder_layer(cfg, lp, x, positions, enc_out,
+                                     None, None, None)
+            return y
+        x = jax.checkpoint(block)(lp, x) if cfg.remat else block(lp, x)
+        x = constrain(x, ("batch", "seq", "embed"))
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    return x, 0.0
+
+
+def logits_fn(cfg: EncDecConfig, params: dict, hidden: Array) -> Array:
+    return unembed_logits(hidden, params["embed"])[..., : cfg.vocab_size]
+
+
+def init_cache(cfg: EncDecConfig, batch: int, s_max: int):
+    dt = cfg.compute_dtype
+    return [{
+        "self": KVCache.zeros(batch, s_max, cfg.num_kv_heads, cfg.head_dim, dt),
+        "cross": KVCache.zeros(batch, cfg.num_frames, cfg.num_kv_heads,
+                               cfg.head_dim, dt),
+    } for _ in range(cfg.decoder_layers)]
+
+
+def cache_axes(cfg: EncDecConfig):
+    kv = KVCache.axes()
+    return [{"self": kv, "cross": kv} for _ in range(cfg.decoder_layers)]
+
+
+def prefill(cfg: EncDecConfig, params: dict, tokens: Array, positions: Array,
+            caches, lengths: Array, frames: Array):
+    """Encode + teacher-forced decoder prefill; populates self+cross caches."""
+    enc_out = encode(cfg, params, frames)
+    dt = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dt)
+    pos = positions if positions.ndim == 2 else positions[..., 0]
+    x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+    new_caches = []
+    for lp, cache in zip(params["decoder"], caches):
+        q, k, v = attn_mod.qkv_project(lp["self_attn"],
+                                       apply_norm(lp["norm1"], x, cfg.norm),
+                                       positions=positions, rope_theta=1e4,
+                                       use_rope=False)
+        new_self = attn_mod.cache_update(cache["self"], k, v, lengths)
+        x, _, new_cross = _decoder_layer(cfg, lp, x, positions, enc_out,
+                                         None, None, None)
+        new_caches.append({"self": new_self, "cross": new_cross})
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    return x, new_caches
+
+
+def decode_step(cfg: EncDecConfig, params: dict, token: Array,
+                positions: Array, caches, lengths: Array):
+    dt = cfg.compute_dtype
+    x = embed_lookup(params["embed"], token, dt)
+    pos = positions if positions.ndim == 2 else positions[..., 0]
+    x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)
+    new_caches = []
+    for lp, cache in zip(params["decoder"], caches):
+        x, new_self, new_cross = _decoder_layer(
+            cfg, lp, x, positions, None, cache["self"], cache["cross"],
+            lengths)
+        new_caches.append({"self": new_self, "cross": new_cross})
+    x = apply_norm(params["dec_final_norm"], x, cfg.norm)
+    hidden = x[:, 0]
+    return logits_fn(cfg, params, hidden), hidden, new_caches
+
+
+def init_params(cfg: EncDecConfig, key):
+    return init_tree(key, param_specs(cfg))
+
+
+def param_structs(cfg: EncDecConfig):
+    return struct_tree(param_specs(cfg))
+
+
+def param_axes(cfg: EncDecConfig):
+    return axes_tree(param_specs(cfg))

@@ -1,0 +1,264 @@
+"""Parameter specs and common layers (norms, embeddings, RoPE, MLPs).
+
+Parameters are plain pytrees of jnp arrays.  Their *shapes, logical sharding
+axes and initializers* are declared once as a pytree of :class:`Spec`; from
+that single declaration we derive
+
+* ``init_tree``    — materialized parameters (host or per-device),
+* ``struct_tree``  — ShapeDtypeStructs (the dry-run's no-allocation path),
+* ``axes_tree``    — logical-axis tuples consumed by dist/sharding.py.
+
+Logical axis names used by the models (resolved by DEFAULT_RULES):
+``embed`` (residual stream), ``heads``, ``kv_heads``, ``head_dim``, ``mlp``,
+``vocab``, ``experts``, ``layers``, ``state`` and the fsdp-style weight axis
+``fsdp`` (mapped to the data axis; XLA SPMD all-gathers weights per layer —
+ZeRO-3 semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declarative parameter: shape + logical axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | uniform_scaled
+    scale: float | None = None    # stddev; default 1/sqrt(fan_in)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def materialize(self, key: Array) -> Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        scale = self.scale
+        if scale is None:
+            fan_in = self.shape[0] if self.shape else 1
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale
+                ).astype(self.dtype)
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_tree(key: Array, specs) -> Any:
+    """Materialize a Spec pytree (deterministic per-leaf key folding)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def struct_tree(specs) -> Any:
+    return jax.tree.map(lambda s: s.struct(), specs, is_leaf=is_spec)
+
+
+def axes_tree(specs) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec: Spec, n: int) -> Spec:
+    """A per-layer Spec stacked for scan-over-layers: leading `layers` axis."""
+    return dataclasses.replace(
+        spec, shape=(n,) + spec.shape, axes=("layers",) + spec.axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMSNorm in f32 accumulation (returns x.dtype)."""
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    nrm = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (nrm * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_spec(d: int, kind: str) -> Any:
+    if kind == "rmsnorm":
+        return {"scale": Spec((d,), ("embed",), init="ones")}
+    return {"scale": Spec((d,), ("embed",), init="ones"),
+            "bias": Spec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(p: dict, x: Array, kind: str) -> Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    """Vocab tables are padded so the vocab axis shards on any mesh
+    (51865 -> 51968 etc.); pad logits are masked at the sampling boundary
+    (logits_fn) and act as never-labeled extra entries in the loss —
+    standard MaxText-style padding."""
+    return -(-vocab // multiple) * multiple
+
+
+def embed_spec(vocab: int, d: int) -> Spec:
+    return Spec((padded_vocab(vocab), d), ("vocab", "fsdp"), scale=1.0)
+
+
+def embed_lookup(table: Array, tokens: Array, compute_dtype,
+                 chunk: int = 512) -> Array:
+    """Token embedding lookup via sequence-chunked one-hot matmul.
+
+    take() on a vocab-sharded table gathers poorly under SPMD; the one-hot
+    matmul form keeps the (V, D) table sharded and emits a small psum over
+    the vocab axis instead — the standard TPU idiom.  The one-hot buffer is
+    (B, chunk, V), so it must be chunked over the sequence (a 32k-token
+    prefill with a 152k vocab would otherwise be a multi-TB buffer) and
+    remat'd so backward rebuilds it instead of saving it.
+    """
+    v = table.shape[0]
+    b, s = tokens.shape
+
+    @jax.checkpoint
+    def one_chunk(toks, table):
+        from repro.dist.sharding import constrain
+        oh = jax.nn.one_hot(toks, v, dtype=compute_dtype)
+        # fsdp-gather the table for the dot (see train/losses.py)
+        table_g = constrain(table.astype(compute_dtype), ("vocab", None))
+        return oh @ table_g
+
+    if s <= chunk:
+        return one_chunk(tokens, table)
+    outs = [one_chunk(tokens[:, c0:c0 + chunk], table)
+            for c0 in range(0, s, chunk)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def unembed_logits(x: Array, table: Array) -> Array:
+    """(..., d) @ (V, d)^T in f32 accumulation -> (..., V)."""
+    from repro.dist.sharding import constrain
+    table_g = constrain(table.astype(x.dtype), ("vocab", None))
+    return jnp.einsum("...d,vd->...v", x, table_g,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4,
+               mrope_section: tuple[int, ...] | None = None) -> Array:
+    """Rotary embedding, optionally multimodal (M-RoPE, Qwen2-VL §3.1).
+
+    x: (B, S, H, D); positions: (B, S) int — or (B, S, 3) for M-RoPE
+    (temporal, height, width components; text tokens carry equal values,
+    making M-RoPE degenerate to 1-D RoPE on text).
+
+    M-RoPE splits the D/2 frequency channels into 3 sections; section ``i``
+    rotates by positions[..., i].
+    """
+    b, s, h, d = x.shape
+    half = d // 2
+    inv = rope_frequencies(d, theta)                       # (half,)
+    if mrope_section is not None:
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+        sec = np.asarray(mrope_section)
+        assert sec.sum() == half, (mrope_section, half)
+        comp = np.repeat(np.arange(3), sec)                # (half,) -> section id
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.asarray(comp)[None, None, :].repeat(b, 0).repeat(s, 1), axis=-1
+        )                                                  # (B, S, half)
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        pos = positions.astype(jnp.float32)[..., None]     # (B, S, 1)
+    angle = pos * inv[None, None, :]                       # (B, S, half)
+    sin = jnp.sin(angle)[:, :, None, :].astype(x.dtype)    # (B, S, 1, half)
+    cos = jnp.cos(angle)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    """Whisper-style fixed sinusoid table (S, d)."""
+    half = d // 2
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, f: int, gated: bool, bias: bool = False) -> dict:
+    spec = {
+        "w_in": Spec((d, f), ("fsdp", "mlp")),
+        "w_out": Spec((f, d), ("mlp", "fsdp")),
+    }
+    if gated:
+        spec["w_gate"] = Spec((d, f), ("fsdp", "mlp"))
+    if bias:
+        spec["b_in"] = Spec((f,), ("mlp",), init="zeros")
+        spec["b_out"] = Spec((d,), ("embed",), init="zeros")
+    return spec
+
+
+def _act(name: str) -> Callable[[Array], Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu_sq": lambda x: jnp.square(jax.nn.relu(x))}[name]
+
+
+def apply_mlp(p: dict, x: Array, act: str) -> Array:
+    """Gated (SwiGLU/GeGLU) or plain 2-layer MLP; matmuls in x.dtype."""
+    dt = x.dtype
+    h = x @ p["w_in"].astype(dt)
+    if "b_in" in p:
+        h = h + p["b_in"].astype(dt)
+    h = _act(act)(h)
+    if "w_gate" in p:
+        h = h * (x @ p["w_gate"].astype(dt))
+    out = h @ p["w_out"].astype(dt)
+    if "b_out" in p:
+        out = out + p["b_out"].astype(dt)
+    return out
+
+
+def mlp_flops(d: int, f: int, gated: bool) -> int:
+    """Per-token matmul FLOPs (for the analytic roofline)."""
+    return 2 * d * f * (3 if gated else 2)

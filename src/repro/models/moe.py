@@ -1,0 +1,164 @@
+"""Mixture-of-Experts FFN — GShard-style grouped top-k dispatch (EP).
+
+Formulation (Lepikhin et al., adapted to einsum-on-mesh):
+
+* tokens are reshaped to (G, S', D) groups; each group dispatches at most
+  ``capacity = S' * top_k * capacity_factor / E`` tokens to each expert
+  (static shapes — overflow drops, standard GShard semantics; the router
+  aux loss keeps load balanced so drops are rare);
+* ``dispatch`` (G, S', E, C) one-hot routes tokens to expert slots; the
+  dispatched einsum reshards tokens from the data axis to the expert
+  (model) axis — XLA SPMD realizes it as an all-to-all, the canonical EP
+  collective;
+* experts are (E, D, F) weight stacks sharded E -> model;
+* ``combine`` (G, S', E, C) carries router weights back (second all-to-all).
+
+Group size trades memory for balance: the dispatch tensor is
+G*S'*E*C = S'^2 * top_k * cf per group-row — small groups keep it tiny
+(DESIGN.md §4).  llama4-style shared expert is a plain dense MLP added to
+every token's output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+from .layers import Spec, apply_mlp, _act
+
+Array = jax.Array
+
+
+def moe_spec(d: int, f: int, num_experts: int, gated: bool = True,
+             router_dtype=jnp.float32) -> dict:
+    spec = {
+        "router": Spec((d, num_experts), ("fsdp", None), dtype=router_dtype),
+        "w_in": Spec((num_experts, d, f), ("experts", "fsdp", "expert_mlp")),
+        "w_out": Spec((num_experts, f, d), ("experts", "expert_mlp", "fsdp")),
+    }
+    if gated:
+        spec["w_gate"] = Spec((num_experts, d, f),
+                              ("experts", "fsdp", "expert_mlp"))
+    return spec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_tokens: int = 512        # S' — tokens per dispatch group
+    router_softmax_order: str = "topk_then_softmax"  # qwen3 renormalizes
+    aux_loss_weight: float = 1e-2
+
+
+def _group_size(total_tokens: int, target: int) -> int:
+    """Largest divisor of total_tokens that is <= target (static shapes)."""
+    for sp in range(min(target, total_tokens), 0, -1):
+        if total_tokens % sp == 0:
+            return sp
+    return 1
+
+
+def _capacity(cfg: MoEConfig, group_tokens: int | None = None) -> int:
+    s = cfg.group_tokens if group_tokens is None else group_tokens
+    c = int(s * cfg.top_k * cfg.capacity_factor // cfg.num_experts)
+    return max(c, 1)
+
+
+def route(router_logits: Array, cfg: MoEConfig):
+    """Top-k routing weights. logits (G, S, E) f32 ->
+    (weights (G,S,K), expert_idx (G,S,K) int32, aux_loss ())."""
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_softmax_order == "topk_then_softmax":
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # Switch/GShard load-balancing loss: E * <fraction routed> . <mean prob>
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    one_hot_top1 = jax.nn.one_hot(top_i[..., 0], e, dtype=probs.dtype)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return top_w, top_i, aux
+
+
+def dispatch_combine(top_w: Array, top_i: Array, cfg: MoEConfig):
+    """Build one-hot dispatch/combine tensors (G, S, E, C).
+
+    Slot assignment: position-in-expert = cumulative count of earlier tokens
+    in the same group routed to the same expert (per k, counted across k
+    levels in order — GShard's sequential-greedy semantics).
+    """
+    g, s, k = top_w.shape
+    e, c = cfg.num_experts, _capacity(cfg, s)
+    # (G, S, K, E) one-hot of assignments
+    oh = jax.nn.one_hot(top_i, e, dtype=jnp.float32)
+    # sequential position: flatten (S, K) in priority order (token-major)
+    flat = oh.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # count of earlier
+    pos = pos.reshape(g, s, k, e)
+    within = jnp.sum(pos * oh, axis=-1).astype(jnp.int32)   # (G, S, K)
+    keep = (within < c) & (top_w > 0)
+    slot_oh = jax.nn.one_hot(within, c, dtype=jnp.float32)  # (G, S, K, C)
+    disp = jnp.einsum("gske,gskc,gsk->gsec", oh, slot_oh,
+                      keep.astype(jnp.float32))
+    comb = jnp.einsum("gske,gskc,gsk->gsec", oh, slot_oh,
+                      jnp.where(keep, top_w, 0.0).astype(jnp.float32))
+    return disp, comb
+
+
+def apply_moe(p: dict, x: Array, cfg: MoEConfig, act: str = "silu",
+              shared_mlp: dict | None = None):
+    """MoE FFN.  x (B, T, D) -> (y (B, T, D), aux_loss ()).
+
+    Internally regroups to (G, S', D); B*T must be divisible by
+    ``cfg.group_tokens`` (configs choose divisible shapes).
+    """
+    b, t, d = x.shape
+    dt = x.dtype
+    sp = _group_size(b * t, cfg.group_tokens)
+    g = (b * t) // sp
+    xg = x.reshape(g, sp, d)
+
+    xg = constrain(xg, ("batch", None, "embed"))
+    logits = (xg.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))            # (G, S, E) f32
+    logits = constrain(logits, ("batch", None, None))
+    top_w, top_i, aux = route(logits, cfg)
+    disp, comb = dispatch_combine(top_w, top_i, cfg)
+    disp = constrain(disp, ("batch", None, "experts", None))
+    comb = constrain(comb, ("batch", None, "experts", None))
+
+    # all-to-all #1: tokens -> expert slots (E on the model axis)
+    xe = jnp.einsum("gsd,gsec->egcd", xg, disp.astype(dt))  # (E, G, C, D)
+    xe = constrain(xe, ("experts", "batch", None, "embed"))
+    # fsdp-gather expert weights for use (E stays on the model axis)
+    w_in = constrain(p["w_in"].astype(dt), ("experts", None, "expert_mlp"))
+    h = jnp.einsum("egcd,edf->egcf", xe, w_in)
+    h = _act(act)(h)
+    if "w_gate" in p:
+        w_gate = constrain(p["w_gate"].astype(dt),
+                           ("experts", None, "expert_mlp"))
+        h = h * jnp.einsum("egcd,edf->egcf", xe, w_gate)
+    w_out = constrain(p["w_out"].astype(dt), ("experts", "expert_mlp", None))
+    ye = jnp.einsum("egcf,efd->egcd", h, w_out)
+    ye = constrain(ye, ("experts", "batch", None, "embed"))
+    # all-to-all #2: expert slots -> tokens, weighted by router probs
+    y = jnp.einsum("egcd,gsec->gsd", ye, comb.astype(dt))
+
+    y = y.reshape(b, t, d)
+    if shared_mlp is not None:                              # llama4 shared expert
+        y = y + apply_mlp(shared_mlp, x, act)
+    return y, aux * cfg.aux_loss_weight
+
+
+def moe_flops_per_token(d: int, f: int, cfg: MoEConfig, gated: bool = True,
+                        shared_f: int = 0) -> int:
+    """Active matmul FLOPs per token (for 6·N_active·D roofline)."""
+    per_expert = 2 * d * f * (3 if gated else 2)
+    shared = 2 * d * shared_f * 3 if shared_f else 0
+    return cfg.top_k * per_expert + shared + 2 * d * cfg.num_experts

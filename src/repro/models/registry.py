@@ -1,0 +1,130 @@
+"""Uniform model interface (ModelBundle) over decoder-only and enc-dec stacks.
+
+Every architecture exposes the same five callables regardless of family, so
+the training loop, serving engine, dry-run and benchmarks are model-agnostic:
+
+    bundle.forward_train(params, batch)          -> (hidden, aux_loss)
+    bundle.logits(params, hidden)                -> logits
+    bundle.init_cache(batch_size, s_max)         -> caches
+    bundle.prefill(params, batch, caches, lens)  -> (last_hidden, caches)
+    bundle.decode_step(params, token, pos, caches, lens) -> (logits, caches)
+
+``batch`` is a dict: tokens (B,S) int32, positions (B,S) or (B,S,3) int32,
+plus modality-stub extras (frames / patch_embeds) where the config declares
+them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encdec, transformer
+from .encdec import EncDecConfig
+from .transformer import LMConfig
+
+
+class ModelBundle(NamedTuple):
+    cfg: Any
+    init: Callable
+    param_specs: Callable
+    param_structs: Callable
+    param_axes: Callable
+    forward_train: Callable
+    logits: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    prefill: Callable
+    decode_step: Callable
+    count_params: int
+    active_params: int
+    extra_inputs: dict  # name -> (shape_fn(B, S) -> shape, dtype, axes)
+
+
+def _lm_bundle(cfg: LMConfig) -> ModelBundle:
+    extras = {}
+    if cfg.num_patch_tokens:
+        extras["patch_embeds"] = (
+            lambda b, s: (b, cfg.num_patch_tokens, cfg.d_model),
+            jnp.float32, ("batch", None, "embed"))
+
+    def forward_train(params, batch):
+        return transformer.forward_train(
+            cfg, params, batch["tokens"], batch["positions"],
+            batch.get("patch_embeds"))
+
+    def prefill(params, batch, caches, lengths):
+        return transformer.prefill(
+            cfg, params, batch["tokens"], batch["positions"], caches,
+            lengths, batch.get("patch_embeds"))
+
+    n = transformer.count_params(cfg)
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        param_specs=lambda: transformer.param_specs(cfg),
+        param_structs=lambda: transformer.param_structs(cfg),
+        param_axes=lambda: transformer.param_axes(cfg),
+        forward_train=forward_train,
+        logits=lambda params, h: transformer.logits_fn(cfg, params, h),
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+        cache_axes=lambda: transformer.cache_axes(cfg),
+        prefill=prefill,
+        decode_step=lambda params, tok, pos, caches, lens:
+            transformer.decode_step(cfg, params, tok, pos, caches, lens),
+        count_params=n,
+        active_params=transformer.active_params(cfg),
+        extra_inputs=extras,
+    )
+
+
+def _encdec_bundle(cfg: EncDecConfig) -> ModelBundle:
+    extras = {"frames": (lambda b, s: (b, cfg.num_frames, cfg.d_model),
+                         jnp.float32, ("batch", None, "embed"))}
+
+    def forward_train(params, batch):
+        return encdec.forward_train(cfg, params, batch["tokens"],
+                                    batch["positions"], batch["frames"])
+
+    def prefill(params, batch, caches, lengths):
+        return encdec.prefill(cfg, params, batch["tokens"],
+                              batch["positions"], caches, lengths,
+                              batch["frames"])
+
+    spec = encdec.param_specs(cfg)
+    n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        spec, is_leaf=lambda x: hasattr(x, "materialize")))
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: encdec.init_params(cfg, key),
+        param_specs=lambda: encdec.param_specs(cfg),
+        param_structs=lambda: encdec.param_structs(cfg),
+        param_axes=lambda: encdec.param_axes(cfg),
+        forward_train=forward_train,
+        logits=lambda params, h: encdec.logits_fn(cfg, params, h),
+        init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+        cache_axes=lambda: encdec.cache_axes(cfg),
+        prefill=prefill,
+        decode_step=lambda params, tok, pos, caches, lens:
+            encdec.decode_step(cfg, params, tok, pos, caches, lens),
+        count_params=n,
+        active_params=n,
+        extra_inputs=extras,
+    )
+
+
+def build_model(cfg) -> ModelBundle:
+    if isinstance(cfg, EncDecConfig):
+        return _encdec_bundle(cfg)
+    if isinstance(cfg, LMConfig):
+        return _lm_bundle(cfg)
+    raise TypeError(f"unknown config type {type(cfg)}")
+
+
+def with_overrides(cfg, **kw):
+    """dataclasses.replace that tolerates either config type."""
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,158 @@
+"""RG-LRU recurrence block (RecurrentGemma / Griffin, De et al. 2024).
+
+The recurrence is a *diagonal* data-dependent linear RNN:
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (per-channel decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Because the recurrence is elementwise-diagonal it is associative, so the
+whole sequence runs as one ``jax.lax.associative_scan`` — log-depth, fully
+parallel, **no while loop** (so the dry-run ``cost_analysis()`` counts it
+exactly; scan bodies are counted once — see models/attention.py docstring).
+
+The full Griffin recurrent block wraps the RG-LRU with the temporal conv1d
+(width 4) and the gated linear projections, matching the paper's block:
+
+    x -> [linear -> conv1d -> RG-LRU] * gelu(linear gate) -> linear out
+
+Numerics follow the paper: gates/recurrence in f32, ``a_t`` computed in
+log-space (``a = exp(log_a)``, ``sqrt(1-a^2)`` via ``-expm1(2 log_a)``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec
+
+Array = jax.Array
+
+_C = 8.0  # the paper's fixed decay sharpness
+
+
+def rglru_spec(d: int, width: int, conv_width: int = 4) -> dict:
+    """Griffin recurrent block parameters.  d = d_model, width = lru_width."""
+    return {
+        "w_in": Spec((d, width), ("fsdp", "state")),
+        "w_gate": Spec((d, width), ("fsdp", "state")),
+        "w_out": Spec((width, d), ("state", "fsdp")),
+        "conv_w": Spec((conv_width, width), (None, "state"), scale=0.3),
+        "conv_b": Spec((width,), ("state",), init="zeros"),
+        "lam": Spec((width,), ("state",), init="uniform_lambda"),
+        "w_a": Spec((width, width), ("state", None), scale=None),
+        "b_a": Spec((width,), ("state",), init="zeros"),
+        "w_x": Spec((width, width), ("state", None), scale=None),
+        "b_x": Spec((width,), ("state",), init="zeros"),
+    }
+
+
+def _lambda_init(lam_raw: Array) -> Array:
+    """Map an init-normal param to the paper's a in [0.9, 0.999] range."""
+    u = jax.nn.sigmoid(lam_raw)                 # (0,1)
+    a_target = 0.9 + 0.099 * u
+    # softplus(Lambda) = -log(a)/c  =>  Lambda = softplus^-1(-log a / c)
+    sp = -jnp.log(a_target) / _C
+    return jnp.log(jnp.expm1(jnp.maximum(sp, 1e-8)))
+
+
+def conv1d_causal(x: Array, w: Array, b: Array,
+                  state: Array | None = None):
+    """Causal temporal conv. x (B,S,W), w (K,W).  Returns (y, new_state).
+
+    ``state`` carries the trailing K-1 steps for decode; None = zero history
+    (training start-of-sequence).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)    # (B, S+K-1, W)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else state
+    return y + b.astype(x.dtype), new_state
+
+
+def rglru_scan(x: Array, r: Array, i: Array, lam: Array,
+               h0: Array | None = None):
+    """The RG-LRU recurrence over a full sequence via associative_scan.
+
+    x/r/i: (B, S, W); lam: (W,) raw parameter; h0: (B, W) carried state.
+    Returns (h (B,S,W) f32, h_last (B,W)).
+    """
+    xf = x.astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r  # (B,S,W) <=0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))                    # sqrt(1-a^2)
+    u = beta * (i * xf)                                          # input term
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0.astype(jnp.float32)[:, None], u], axis=1)
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, a2 * u1 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rglru_step(x: Array, r: Array, i: Array, lam: Array, h: Array):
+    """Single decode step.  x/r/i (B, W); h (B, W) -> (out, h_new)."""
+    xf = x.astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h_new = a * h.astype(jnp.float32) + beta * (i * xf)
+    return h_new, h_new
+
+
+def apply_rglru_block(p: dict, x: Array, state: dict | None = None,
+                      act=jax.nn.gelu):
+    """Full Griffin recurrent block.  x (B, S, D) -> (y (B,S,D), new_state).
+
+    ``state``: {"h": (B,W), "conv": (B,K-1,W)} or None (training, zeros).
+    """
+    dt = x.dtype
+    gate = act(x @ p["w_gate"].astype(dt))                  # (B,S,W)
+    u = x @ p["w_in"].astype(dt)
+    u, conv_state = conv1d_causal(
+        u, p["conv_w"], p["conv_b"],
+        None if state is None else state["conv"])
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32) + p["b_x"])
+    lam = _lambda_init(p["lam"])
+
+    h0 = None if state is None else state["h"]
+    if x.shape[1] == 1 and state is not None:               # decode fast path
+        h_seq, h_last = rglru_step(u[:, 0], r[:, 0], i[:, 0], lam, h0)
+        h_seq = h_seq[:, None]
+    else:
+        h_seq, h_last = rglru_scan(u, r, i, lam, h0)
+
+    y = (h_seq.astype(dt) * gate) @ p["w_out"].astype(dt)
+    new_state = {"h": h_last, "conv": conv_state}
+    return y, new_state
+
+
+def rglru_state_zeros(b: int, width: int, conv_width: int = 4,
+                      dtype=jnp.float32) -> dict:
+    return {"h": jnp.zeros((b, width), jnp.float32),
+            "conv": jnp.zeros((b, conv_width - 1, width), dtype)}
+
+
+def rglru_state_axes() -> dict:
+    return {"h": ("batch", "state"), "conv": ("batch", None, "state")}
+
+
+def rglru_flops_per_token(d: int, width: int, conv_width: int = 4) -> int:
+    """Matmul FLOPs/token: 3 d×W projections + 2 W×W gates + conv."""
+    return 2 * (3 * d * width + 2 * width * width) + 2 * conv_width * width

@@ -1,0 +1,252 @@
+"""RWKV-6 "Finch" (Peng et al. 2024) — attention-free time mixing with
+data-dependent per-channel decay.
+
+Per head (head size N), with row vectors r_t, k_t, v_t and decay w_t:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state: N_key x N_value)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)      (u = per-channel bonus)
+
+Training runs the **chunked parallel form** (python-unrolled chunk loop,
+remat'd bodies — no while loops, so dry-run cost_analysis is exact):
+
+* within a chunk, cumulative log-decays L_t = sum_{s<=t} log w_s are
+  computed once; intra-chunk pair terms use exp(Lprev_t - L_s) with s <= t,
+  where the EXPONENT DIFFERENCE is formed first (always <= 0 for valid
+  pairs) — numerically safe for arbitrarily strong decay, unlike the
+  exp(L)·exp(-L) matmul factorization which overflows;
+* inter-chunk contributions flow through the carried state S with factors
+  exp(L) <= 1.
+
+Decode runs the O(1) recurrence directly.
+
+Token-shift ("ddlerp") follows the RWKV-6 low-rank form: a shared first
+lerp, then a 5-way LoRA producing per-projection mix deltas for r/k/v/w/g.
+The decay LoRA gives w_t = exp(-exp(w0 + tanh(x_w A_w) B_w)) per channel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Spec
+
+Array = jax.Array
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+def rwkv_time_spec(d: int, head_dim: int, lora_r: int = 32,
+                   decay_lora: int = 64) -> dict:
+    h = d // head_dim
+    return {
+        "mu_first": Spec((d,), ("embed",), init="zeros"),
+        "mu": Spec((5, d), (None, "embed"), init="zeros"),
+        "lora_a": Spec((d, 5 * lora_r), ("fsdp", None), scale=0.01),
+        "lora_b": Spec((5, lora_r, d), (None, None, "embed"), scale=0.01),
+        "w_r": Spec((d, d), ("fsdp", "heads")),
+        "w_k": Spec((d, d), ("fsdp", "heads")),
+        "w_v": Spec((d, d), ("fsdp", "heads")),
+        "w_g": Spec((d, d), ("fsdp", "heads")),
+        "w_o": Spec((d, d), ("heads", "fsdp")),
+        "decay_w0": Spec((d,), ("heads",), init="zeros"),
+        "decay_a": Spec((d, decay_lora), ("fsdp", None), scale=0.01),
+        "decay_b": Spec((decay_lora, d), (None, "heads"), scale=0.01),
+        "bonus_u": Spec((d,), ("heads",), init="zeros"),
+        "ln_scale": Spec((d,), ("heads",), init="ones"),
+        "ln_bias": Spec((d,), ("heads",), init="zeros"),
+    }
+
+
+def rwkv_channel_spec(d: int, f: int) -> dict:
+    return {
+        "mu_k": Spec((d,), ("embed",), init="zeros"),
+        "mu_r": Spec((d,), ("embed",), init="zeros"),
+        "w_k": Spec((d, f), ("fsdp", "mlp")),
+        "w_v": Spec((f, d), ("mlp", "fsdp")),
+        "w_r": Spec((d, d), ("fsdp", None)),
+    }
+
+
+def _token_shift(x: Array, x_prev: Array | None):
+    """(B,S,D) -> previous-step tensor with carried boundary state (B,D)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, 0])
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def _ddlerp(p: dict, x: Array, shifted: Array):
+    """RWKV-6 data-dependent lerp: 5 mixed inputs (r,k,v,w,g)."""
+    dt = x.dtype
+    xx = shifted - x
+    base = x + xx * p["mu_first"].astype(dt)
+    lr = p["lora_a"].shape[1] // 5
+    lo = jnp.tanh(base @ p["lora_a"].astype(dt))            # (B,S,5r)
+    lo = lo.reshape(*lo.shape[:-1], 5, lr)
+    delta = jnp.einsum("bsnr,nrd->bsnd", lo, p["lora_b"].astype(dt))
+    mixes = {}
+    for n, name in enumerate(_MIX):
+        mu = p["mu"][n].astype(dt) + delta[..., n, :]
+        mixes[name] = x + xx * mu
+    return mixes
+
+
+def _group_norm(x: Array, scale: Array, bias: Array, head_dim: int,
+                eps: float = 64e-5):
+    """Per-head LayerNorm over the head channels (RWKV's GroupNorm)."""
+    shape = x.shape
+    xh = x.reshape(*shape[:-1], shape[-1] // head_dim, head_dim)
+    xf = xh.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    nrm = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return (nrm * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# WKV — chunked parallel form
+# ---------------------------------------------------------------------------
+
+def _wkv_chunk(r, k, v, logw, u, state):
+    """One chunk of the WKV recurrence.
+
+    r/k/v: (B, C, H, N); logw: (B, C, H, N) (<= 0, f32); u: (H, N);
+    state: (B, H, N, N) f32.  Returns (o (B,C,H,N) f32, new_state).
+    """
+    logw = logw.astype(jnp.float32)
+    el = jnp.cumsum(logw, axis=1)                           # L_t
+    el_prev = el - logw                                     # L_{t-1}
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # inter-chunk: o_t += (r_t . exp(L_{t-1})) @ S
+    o = jnp.einsum("bchn,bhnm->bchm", rf * jnp.exp(el_prev), state)
+
+    # intra-chunk pairs s<t: A[t,s] = sum_n r[t,n] k[s,n] exp(Lprev[t,n]-L[s,n])
+    diff = el_prev[:, :, None] - el[:, None, :]             # (B,C,C,H,N) <=0 valid
+    c = r.shape[1]
+    causal = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+    decay = jnp.exp(jnp.where(causal[None, :, :, None, None], diff, -jnp.inf))
+    att = jnp.einsum("bthn,bshn,btshn->bths", rf, kf, decay)
+    # diagonal (s=t) carries the bonus u instead of decay
+    att_diag = jnp.einsum("bthn,bthn->bth", rf * u.astype(jnp.float32), kf)
+    att = att + att_diag[:, :, :, None] * jnp.eye(c)[None, :, None, :]
+    o = o + jnp.einsum("bths,bshn->bthn", att, vf)
+
+    # state update: S' = diag(exp(L_C)) S + sum_s (k_s * exp(L_C - L_s))^T v_s
+    tail = el[:, -1:, :]                                    # (B,1,H,N)
+    k_scaled = kf * jnp.exp(tail - el)                      # <=1 factors
+    new_state = (jnp.exp(tail[:, 0])[..., None] * state
+                 + jnp.einsum("bshn,bshm->bhnm", k_scaled, vf))
+    return o, new_state
+
+
+def wkv_chunked(r, k, v, logw, u, state, chunk: int = 128):
+    """Full-sequence WKV.  All of r/k/v/logw: (B, S, H, N)."""
+    s = r.shape[1]
+    chunk = min(chunk, s)
+    outs = []
+    body = jax.checkpoint(_wkv_chunk)
+    for c0 in range(0, s, chunk):
+        c1 = min(c0 + chunk, s)
+        o, state = body(r[:, c0:c1], k[:, c0:c1], v[:, c0:c1],
+                        logw[:, c0:c1], u, state)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Decode step.  r/k/v/logw (B,H,N); state (B,H,N,N) f32."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]                # (B,H,N,N)
+    o = jnp.einsum("bhn,bhnm->bhm", rf,
+                   state + u.astype(jnp.float32)[..., None] * kv)
+    new_state = jnp.exp(logw.astype(jnp.float32))[..., None] * state + kv
+    return o, new_state
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def apply_rwkv_time(p: dict, x: Array, head_dim: int,
+                    state: dict | None = None, chunk: int = 128):
+    """Time-mix block.  x (B,S,D) -> (y, new_state).
+
+    state: {"shift": (B,D), "wkv": (B,H,N,N) f32} or None.
+    """
+    b, s, d = x.shape
+    h = d // head_dim
+    dt = x.dtype
+    shifted, shift_out = _token_shift(
+        x, None if state is None else state["shift"])
+    mx = _ddlerp(p, x, shifted)
+
+    r = (mx["r"] @ p["w_r"].astype(dt)).reshape(b, s, h, head_dim)
+    k = (mx["k"] @ p["w_k"].astype(dt)).reshape(b, s, h, head_dim)
+    v = (mx["v"] @ p["w_v"].astype(dt)).reshape(b, s, h, head_dim)
+    g = jax.nn.silu(mx["g"] @ p["w_g"].astype(dt))
+
+    dw = jnp.tanh(mx["w"] @ p["decay_a"].astype(dt)) @ p["decay_b"].astype(dt)
+    logw = -jnp.exp(jnp.clip(
+        p["decay_w0"].astype(jnp.float32) + dw.astype(jnp.float32),
+        -12.0, 6.0))                                        # (B,S,D) <= 0
+    logw = logw.reshape(b, s, h, head_dim)
+    u = p["bonus_u"].astype(jnp.float32).reshape(h, head_dim)
+
+    wkv0 = (jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+            if state is None else state["wkv"])
+    if s == 1 and state is not None:
+        o, wkv = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], u, wkv0)
+        o = o[:, None]
+    else:
+        o, wkv = wkv_chunked(r, k, v, logw, u, wkv0, chunk=chunk)
+
+    o = o.reshape(b, s, d).astype(dt)
+    o = _group_norm(o, p["ln_scale"], p["ln_bias"], head_dim) * g
+    y = o @ p["w_o"].astype(dt)
+    return y, {"shift": shift_out, "wkv": wkv}
+
+
+def apply_rwkv_channel(p: dict, x: Array, state: dict | None = None):
+    """Channel-mix block (squared-ReLU FFN with token shift)."""
+    dt = x.dtype
+    shifted, shift_out = _token_shift(
+        x, None if state is None else state["shift"])
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt)))
+    rr = jax.nn.sigmoid(xr @ p["w_r"].astype(dt))
+    return rr * (kk @ p["w_v"].astype(dt)), {"shift": shift_out}
+
+
+def rwkv_state_zeros(b: int, d: int, head_dim: int, dtype=jnp.bfloat16):
+    h = d // head_dim
+    return {
+        "time": {"shift": jnp.zeros((b, d), dtype),
+                 "wkv": jnp.zeros((b, h, head_dim, head_dim), jnp.float32)},
+        "channel": {"shift": jnp.zeros((b, d), dtype)},
+    }
+
+
+def rwkv_state_axes():
+    return {
+        "time": {"shift": ("batch", "embed"),
+                 "wkv": ("batch", "heads", None, None)},
+        "channel": {"shift": ("batch", "embed")},
+    }
+
+
+def rwkv_flops_per_token(d: int, f: int, head_dim: int,
+                         lora_r: int = 32, decay_lora: int = 64) -> int:
+    """Matmul FLOPs/token (WKV recurrence itself adds ~4N per channel)."""
+    proj = 2 * d * d * 5                        # r,k,v,g,o
+    lora = 2 * d * (5 * lora_r) + 2 * 5 * lora_r * d + 2 * d * decay_lora * 2
+    wkv = 4 * d * head_dim                      # state update + readout
+    chan = 2 * d * f * 2 + 2 * d * d
+    return proj + lora + wkv + chan

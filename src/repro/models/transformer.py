@@ -1,0 +1,510 @@
+"""Decoder-only LM assembly: dense / MoE / hybrid (RG-LRU) / RWKV stacks.
+
+One config-driven implementation covers 9 of the 10 assigned architectures
+(whisper's encoder-decoder lives in encdec.py).  A layer is
+
+    x = x + mixer(norm1(x))     mixer in {attn, local_attn, rglru, rwkv_time}
+    x = x + ffn(norm2(x))       ffn   in {gated/plain MLP, MoE, rwkv_channel}
+
+with the per-layer kind taken from ``cfg.block_pattern`` cycled over depth.
+
+Execution modes:
+
+* ``forward_train`` — full-sequence teacher forcing; optional
+  scan-over-layers (homogeneous stacks; stacked params) with remat;
+  chunked-flash attention for long sequences.  Loss is computed by the
+  caller (train/losses.py) against the returned hidden states so the giant
+  (B, S, V) logits tensor is never materialized at once.
+* ``prefill`` — same forward but writes KV/recurrent caches and returns the
+  last-position hidden state (serving: first token of the response).
+* ``decode_step`` — one token against the caches. Never scanned (layer loop
+  is python; decode programs are small).
+
+Sharding is by logical axes only (layers.Spec); the launcher resolves them
+against whatever mesh is active (dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import constrain
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv as rwkv_mod
+from .attention import KVCache
+from .layers import (Spec, apply_mlp, apply_norm, axes_tree, embed_lookup,
+                     embed_spec, init_tree, mlp_spec, norm_spec, stack_specs,
+                     struct_tree, unembed_logits)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # layer pattern, cycled over depth
+    block_pattern: tuple[str, ...] = ("attn",)
+    ffn_kind: str = "gated"              # gated | plain | moe | rwkv_channel
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    # attention details
+    qkv_bias: bool = False
+    out_bias: bool = False
+    mlp_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope_section: tuple[int, ...] | None = None
+    window: int | None = None            # sliding window for local_attn
+    # MoE
+    moe: moe_mod.MoEConfig | None = None
+    moe_d_ff: int = 0
+    shared_expert_ff: int = 0
+    # recurrent widths
+    lru_width: int = 0
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+    # embeddings / head
+    tie_embeddings: bool = True
+    pos_embedding: str = "rope"          # rope | learned | none
+    max_position: int = 1 << 20
+    # multimodal stub
+    num_patch_tokens: int = 0            # vlm: first P positions are patches
+    # execution
+    scan_layers: bool = False
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots | offloadable-dots
+    compute_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    dense_attn_threshold: int = 2048
+    rwkv_chunk: int = 128
+
+    # -- derived -----------------------------------------------------------
+    def layer_kinds(self) -> tuple[str, ...]:
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    def homogeneous(self) -> bool:
+        return len(set(self.layer_kinds())) == 1
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _mixer_spec(cfg: LMConfig, kind: str) -> dict:
+    if kind in ("attn", "local_attn"):
+        return attn_mod.attention_spec(
+            cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, out_bias=cfg.out_bias)
+    if kind == "rglru":
+        return rglru_mod.rglru_spec(cfg.d_model, cfg.lru_width, cfg.conv_width)
+    if kind == "rwkv":
+        return rwkv_mod.rwkv_time_spec(cfg.d_model, cfg.rwkv_head_dim)
+    raise ValueError(kind)
+
+
+def _ffn_spec(cfg: LMConfig) -> dict:
+    if cfg.ffn_kind == "moe":
+        spec = moe_mod.moe_spec(cfg.d_model, cfg.moe_d_ff, cfg.moe.num_experts)
+        if cfg.shared_expert_ff:
+            spec["shared"] = mlp_spec(cfg.d_model, cfg.shared_expert_ff,
+                                      gated=True)
+        return spec
+    if cfg.ffn_kind == "rwkv_channel":
+        return rwkv_mod.rwkv_channel_spec(cfg.d_model, cfg.d_ff)
+    return mlp_spec(cfg.d_model, cfg.d_ff, gated=(cfg.ffn_kind == "gated"),
+                    bias=cfg.mlp_bias)
+
+
+def _layer_spec(cfg: LMConfig, kind: str) -> dict:
+    return {
+        "norm1": norm_spec(cfg.d_model, cfg.norm),
+        "mixer": _mixer_spec(cfg, kind),
+        "norm2": norm_spec(cfg.d_model, cfg.norm),
+        "ffn": _ffn_spec(cfg),
+    }
+
+
+def param_specs(cfg: LMConfig) -> dict:
+    spec: dict = {"embed": embed_spec(cfg.vocab_size, cfg.d_model),
+                  "final_norm": norm_spec(cfg.d_model, cfg.norm)}
+    if not cfg.tie_embeddings:
+        spec["unembed"] = embed_spec(cfg.vocab_size, cfg.d_model)
+    if cfg.pos_embedding == "learned":
+        spec["pos_embed"] = Spec((cfg.max_position, cfg.d_model),
+                                 (None, "fsdp"), scale=0.02)
+    kinds = cfg.layer_kinds()
+    if cfg.scan_layers and cfg.homogeneous():
+        one = _layer_spec(cfg, kinds[0])
+        spec["layers"] = jax.tree.map(
+            lambda s: stack_specs(s, cfg.num_layers), one,
+            is_leaf=lambda x: isinstance(x, Spec))
+    else:
+        spec["layers"] = [_layer_spec(cfg, k) for k in kinds]
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(cfg: LMConfig, kind: str, p: dict, x: Array, *,
+                 positions: Array, cache, lengths):
+    """Returns (y, new_cache).  cache semantics per kind (None = training)."""
+    if kind in ("attn", "local_attn"):
+        window = cfg.window if kind == "local_attn" else None
+        use_rope = cfg.pos_embedding == "rope"
+        q, k, v = attn_mod.qkv_project(
+            p, x, positions=positions, rope_theta=cfg.rope_theta,
+            mrope_section=cfg.mrope_section, use_rope=use_rope)
+        if cache is None:                                   # training
+            out = attn_mod.sdpa(q, k, v, causal=True, window=window,
+                                dense_threshold=cfg.dense_attn_threshold,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            new_cache = None
+        elif x.shape[1] == 1:                               # decode step
+            cache = _cache_write(cache, k, v, lengths, window)
+            if window is not None and cache.k.shape[1] <= window:
+                # ring buffer: every filled slot is inside the window by
+                # construction; slot indices are permuted so the positional
+                # window mask must not apply (attention is order-free).
+                filled = jnp.minimum(lengths + 1, cache.k.shape[1])
+                out = attn_mod.decode_attend(q, cache, filled, window=None)
+            else:
+                out = attn_mod.decode_attend(q, cache, lengths + 1,
+                                             window=window)
+            new_cache = cache
+        else:                                               # prefill
+            out = attn_mod.sdpa(q, k, v, causal=True, window=window,
+                                dense_threshold=cfg.dense_attn_threshold,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+            new_cache = _cache_write(cache, k, v, lengths, window)
+        return attn_mod.out_project(p, out), new_cache
+    if kind == "rglru":
+        return rglru_mod.apply_rglru_block(p, x, cache)
+    if kind == "rwkv":
+        return rwkv_mod.apply_rwkv_time(p, x, cfg.rwkv_head_dim, cache,
+                                        chunk=cfg.rwkv_chunk)
+    raise ValueError(kind)
+
+
+def _cache_write(cache: KVCache, k: Array, v: Array, lengths: Array,
+                 window: int | None) -> KVCache:
+    """Write new KV; local-attention caches are ring buffers of size W."""
+    s_max = cache.k.shape[1]
+    s_new = k.shape[1]
+    if window is not None and s_max <= window:
+        # ring buffer: only the trailing min(s_new, W) steps can survive
+        keep = min(s_new, s_max)
+        k, v = k[:, -keep:], v[:, -keep:]
+        start = lengths + (s_new - keep)
+        tgt = (start[:, None] + jnp.arange(keep)[None, :]) % s_max
+        oh = jax.nn.one_hot(tgt, s_max, dtype=cache.k.dtype)
+        keep_mask = 1.0 - jnp.sum(oh, axis=1)
+        new_k = cache.k * keep_mask[..., None, None] + jnp.einsum(
+            "bns,bnhd->bshd", oh, k.astype(cache.k.dtype))
+        new_v = cache.v * keep_mask[..., None, None] + jnp.einsum(
+            "bns,bnhd->bshd", oh, v.astype(cache.v.dtype))
+        return KVCache(k=new_k, v=new_v)
+    return attn_mod.cache_update(cache, k, v, lengths)
+
+
+def _apply_ffn(cfg: LMConfig, p: dict, x: Array, cache):
+    """Returns (y, aux_loss, new_cache)."""
+    if cfg.ffn_kind == "moe":
+        shared = p.get("shared")
+        y, aux = moe_mod.apply_moe(p, x, cfg.moe, act=cfg.act,
+                                   shared_mlp=shared)
+        return y, aux, cache
+    if cfg.ffn_kind == "rwkv_channel":
+        y, new_cache = rwkv_mod.apply_rwkv_channel(p, x, cache)
+        return y, 0.0, new_cache
+    return apply_mlp(p, x, cfg.act), 0.0, cache
+
+
+def _apply_layer(cfg: LMConfig, kind: str, p: dict, x: Array, *,
+                 positions, cache, lengths):
+    """cache: {"mixer": ..., "ffn": ...} or None."""
+    mixer_cache = None if cache is None else cache["mixer"]
+    ffn_cache = None if cache is None else cache.get("ffn")
+    h, new_mx = _apply_mixer(cfg, kind, p["mixer"],
+                             apply_norm(p["norm1"], x, cfg.norm),
+                             positions=positions, cache=mixer_cache,
+                             lengths=lengths)
+    x = x + h
+    h, aux, new_ffn = _apply_ffn(cfg, p["ffn"],
+                                 apply_norm(p["norm2"], x, cfg.norm),
+                                 ffn_cache)
+    x = x + h
+    new_cache = None if cache is None else {"mixer": new_mx, "ffn": new_ffn}
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding front
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: LMConfig, params: dict, tokens: Array,
+                 positions: Array, patch_embeds: Array | None = None) -> Array:
+    dt = cfg.compute_dtype
+    x = embed_lookup(params["embed"], tokens, dt)
+    if cfg.num_patch_tokens and patch_embeds is not None:
+        # VLM stub: first P positions carry precomputed patch embeddings.
+        p = patch_embeds.shape[1]
+        is_patch = (jnp.arange(tokens.shape[1]) < p)[None, :, None]
+        pe = jnp.zeros_like(x).at[:, :p].set(patch_embeds.astype(dt))
+        x = jnp.where(is_patch, pe, x)
+    if cfg.pos_embedding == "learned":
+        pos = positions if positions.ndim == 2 else positions[..., 0]
+        pe = jnp.take(params["pos_embed"], pos, axis=0).astype(dt)
+        x = x + pe
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: LMConfig, params: dict, tokens: Array,
+                  positions: Array, patch_embeds: Array | None = None):
+    """(B, S) tokens -> (hidden (B, S, D), aux_loss)."""
+    x = embed_inputs(cfg, params, tokens, positions, patch_embeds)
+    x = constrain(x, ("batch", "seq", "embed"))
+    kinds = cfg.layer_kinds()
+
+    if cfg.scan_layers and cfg.homogeneous():
+        kind = kinds[0]
+
+        def body(carry, layer_p):
+            x, aux = carry
+            y, a, _ = _apply_layer(cfg, kind, layer_p, x,
+                                   positions=positions, cache=None,
+                                   lengths=None)
+            y = constrain(y, ("batch", "seq", "embed"))
+            return (y, aux + a), None
+
+        body = _remat(cfg, body)
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    else:
+        aux = 0.0
+        for kind, lp in zip(kinds, params["layers"]):
+            fn = _remat(cfg, functools.partial(_apply_layer, cfg, kind))
+            x, a, _ = fn(lp, x, positions=positions, cache=None, lengths=None)
+            x = constrain(x, ("batch", "seq", "embed"))
+            aux = aux + a
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def logits_fn(cfg: LMConfig, params: dict, hidden: Array) -> Array:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_logits(hidden, table)
+    return logits[..., : cfg.vocab_size]   # strip vocab padding (sampling)
+
+
+# -- caches ------------------------------------------------------------------
+
+def _one_layer_cache(cfg: LMConfig, kind: str, batch: int, s_max: int):
+    dt = cfg.compute_dtype
+    if kind == "attn":
+        mx = KVCache.zeros(batch, s_max, cfg.num_kv_heads, cfg.head_dim, dt)
+    elif kind == "local_attn":
+        size = min(s_max, cfg.window)
+        mx = KVCache.zeros(batch, size, cfg.num_kv_heads, cfg.head_dim, dt)
+    elif kind == "rglru":
+        mx = rglru_mod.rglru_state_zeros(batch, cfg.lru_width,
+                                         cfg.conv_width, dt)
+    elif kind == "rwkv":
+        st = rwkv_mod.rwkv_state_zeros(batch, cfg.d_model,
+                                       cfg.rwkv_head_dim, dt)
+        return {"mixer": st["time"], "ffn": st["channel"]}
+    return {"mixer": mx,
+            "ffn": {"shift": jnp.zeros((batch, cfg.d_model), dt)}
+            if cfg.ffn_kind == "rwkv_channel" else None}
+
+
+def _scan_serving(cfg: LMConfig) -> bool:
+    """Homogeneous scanned stacks also scan prefill/decode (stacked caches);
+    a python layer loop at 80 layers x chunked attention explodes compile
+    time (observed: qwen2-vl prefill_32k > 10 min unrolled)."""
+    return cfg.scan_layers and cfg.homogeneous()
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int):
+    """Decode caches: stacked (L, ...) pytree for scanned homogeneous
+    stacks, else a per-layer list."""
+    kinds = cfg.layer_kinds()
+    if _scan_serving(cfg):
+        one = _one_layer_cache(cfg, kinds[0], batch, s_max)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            one)
+    return [_one_layer_cache(cfg, k, batch, s_max) for k in kinds]
+
+
+def _one_layer_cache_axes(cfg: LMConfig, kind: str):
+    if kind in ("attn", "local_attn"):
+        mx = KVCache.axes()
+    elif kind == "rglru":
+        mx = rglru_mod.rglru_state_axes()
+    elif kind == "rwkv":
+        st = rwkv_mod.rwkv_state_axes()
+        return {"mixer": st["time"], "ffn": st["channel"]}
+    return {"mixer": mx,
+            "ffn": {"shift": ("batch", "embed")}
+            if cfg.ffn_kind == "rwkv_channel" else None}
+
+
+def cache_axes(cfg: LMConfig):
+    """Logical-axis pytree matching init_cache (for sharding resolution)."""
+    kinds = cfg.layer_kinds()
+    if _scan_serving(cfg):
+        one = _one_layer_cache_axes(cfg, kinds[0])
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x)
+        return jax.tree.map(lambda ax: ("layers",) + ax, one,
+                            is_leaf=is_axes)
+    return [_one_layer_cache_axes(cfg, k) for k in kinds]
+
+
+def _remat(cfg: LMConfig, fn):
+    """Wrap a layer body per the config's remat policy.
+
+    "nothing": recompute everything in backward (min memory, +2·fwd FLOPs
+    of recompute); "dots": keep matmul outputs (no recompute of the
+    MXU-bound work — the §Perf compute-term lever, at activation-memory
+    cost).
+    """
+    if not cfg.remat:
+        return fn
+    policy = {
+        "nothing": None,
+        "dots": jax.checkpoint_policies.dots_saveable,
+        "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _layer_params(cfg: LMConfig, params: dict, i: int):
+    if cfg.scan_layers and cfg.homogeneous():
+        return jax.tree.map(lambda a: a[i], params["layers"])
+    return params["layers"][i]
+
+
+def prefill(cfg: LMConfig, params: dict, tokens: Array, positions: Array,
+            caches, lengths: Array, patch_embeds: Array | None = None):
+    """Teacher-forced forward that also populates the caches.
+
+    Returns (hidden (B, S, D), new_caches).  ``lengths``: (B,) number of
+    valid cache entries BEFORE this call (0 for a fresh prefill).  The full
+    hidden sequence is returned so the serving engine can sample at each
+    slot's true last-prompt position (right-padded batched prefill).
+    """
+    x = embed_inputs(cfg, params, tokens, positions, patch_embeds)
+    x = constrain(x, ("batch", "seq", "embed"))
+    kinds = cfg.layer_kinds()
+    if _scan_serving(cfg):
+        def body(x, layer):
+            lp, cache_l = layer
+            y, _, nc = _apply_layer(cfg, kinds[0], lp, x,
+                                    positions=positions, cache=cache_l,
+                                    lengths=lengths)
+            y = constrain(y, ("batch", "seq", "embed"))
+            return y, nc
+        x, new_caches = jax.lax.scan(_remat(cfg, body), x,
+                                     (params["layers"], caches))
+    else:
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            lp = _layer_params(cfg, params, i)
+            x, _, nc = _apply_layer(cfg, kind, lp, x, positions=positions,
+                                    cache=caches[i], lengths=lengths)
+            x = constrain(x, ("batch", "seq", "embed"))
+            new_caches.append(nc)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, new_caches
+
+
+def decode_step(cfg: LMConfig, params: dict, token: Array, positions: Array,
+                caches, lengths: Array):
+    """One decode step.  token (B, 1); lengths (B,) = cache fill before step.
+
+    Returns (logits (B, V), hidden (B, D), new_caches) — the hidden state
+    feeds the kNN-LM datastore lookup (serve/knnlm.py).
+    """
+    x = embed_inputs(cfg, params, token, positions)
+    x = constrain(x, ("batch", "seq", "embed"))
+    kinds = cfg.layer_kinds()
+    if _scan_serving(cfg):
+        def body(x, layer):
+            lp, cache_l = layer
+            y, _, nc = _apply_layer(cfg, kinds[0], lp, x,
+                                    positions=positions, cache=cache_l,
+                                    lengths=lengths)
+            return y, nc
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    else:
+        new_caches = []
+        for i, kind in enumerate(kinds):
+            lp = _layer_params(cfg, params, i)
+            x, _, nc = _apply_layer(cfg, kind, lp, x, positions=positions,
+                                    cache=caches[i], lengths=lengths)
+            x = constrain(x, ("batch", "seq", "embed"))
+            new_caches.append(nc)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    hidden = x[:, 0]
+    return logits_fn(cfg, params, hidden), hidden, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: LMConfig, key: Array):
+    return init_tree(key, param_specs(cfg))
+
+
+def param_structs(cfg: LMConfig):
+    return struct_tree(param_specs(cfg))
+
+
+def param_axes(cfg: LMConfig):
+    return axes_tree(param_specs(cfg))
+
+
+def count_params(cfg: LMConfig) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(param_specs(cfg),
+                                        is_leaf=lambda x: isinstance(x, Spec)))
+
+
+def active_params(cfg: LMConfig) -> int:
+    """Parameters touched per token (MoE: top-k experts only) — for 6·N·D."""
+    total = count_params(cfg)
+    if cfg.ffn_kind != "moe":
+        return total
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    per_expert = cfg.d_model * cfg.moe_d_ff * 3
+    inactive = cfg.num_layers * (e - k) * per_expert
+    return total - inactive

@@ -1,0 +1,2 @@
+# Serving substrate: batched prefill/decode engine + the BrePartition
+# kNN-LM datastore integration (the paper's technique at the serving layer).

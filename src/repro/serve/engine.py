@@ -1,0 +1,185 @@
+"""Batched serving engine: continuous prefill/decode over a fixed slot pool.
+
+Production shape: a pool of B sequence slots, each with its own KV/state
+cache region and length counter.  New requests prefill into free slots;
+every engine tick runs ONE decode step for all slots (continuous batching a
+la Orca/vLLM, with static shapes — TPU programs can't grow).
+
+Two jitted programs, shared across all requests:
+
+    prefill_fn(params, batch, caches, lengths)  -> (hidden (B,S,D), caches)
+    decode_fn(params, token, pos, caches, lens) -> (logits, caches)
+
+Padding policy: prompts are RIGHT-padded to ``prefill_len``.  Attention
+caches tolerate trailing garbage (decode masks ``ki < length``); recurrent
+states (RG-LRU / RWKV) would integrate the padding, so recurrent archs
+require exact-length prompts (asserted) — production engines solve this
+with per-bucket prefill programs, a launcher concern out of scope here.
+
+Slot isolation: batched prefill touches every slot's cache region, so the
+engine re-merges old cache values for non-admitted slots (one select per
+leaf) — active sequences are never perturbed (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int                    # max concurrent sequences (batch size)
+    max_seq: int                  # cache capacity per slot
+    prefill_len: int              # static prompt padding length
+    eos_token: int = -1           # -1: never stop on a token
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+def _is_recurrent(bundle) -> bool:
+    kinds = getattr(bundle.cfg, "layer_kinds", lambda: ("attn",))()
+    return any(k in ("rglru", "rwkv") for k in kinds)
+
+
+class Engine:
+    """Host-side slot manager around the two jitted device programs."""
+
+    def __init__(self, bundle, params, cfg: EngineConfig,
+                 logits_hook: Callable | None = None, seed: int = 0):
+        self.bundle = bundle
+        self.params = params
+        self.cfg = cfg
+        self.logits_hook = logits_hook      # e.g. kNN-LM interpolation
+        self.caches = bundle.init_cache(cfg.slots, cfg.max_seq)
+        self.lengths = np.zeros((cfg.slots,), np.int32)
+        self.slot_req: list[Request | None] = [None] * cfg.slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rng = jax.random.PRNGKey(seed)
+        self._mrope = bool(getattr(bundle.cfg, "mrope_section", None))
+        self._recurrent = _is_recurrent(bundle)
+        self.ticks = 0
+
+        self._decode = jax.jit(bundle.decode_step)
+        self._prefill = jax.jit(bundle.prefill)
+        self._merge = jax.jit(
+            lambda new, old, mask: jax.tree.map(
+                lambda n, o: jnp.where(
+                    mask.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+                new, old))
+
+    # -- request lifecycle ----------------------------------------------------
+    def submit(self, req: Request):
+        if self._recurrent and len(req.prompt) != self.cfg.prefill_len:
+            raise ValueError(
+                "recurrent archs need exact-length prompts "
+                f"({len(req.prompt)} != prefill_len={self.cfg.prefill_len}); "
+                "see engine docstring")
+        if len(req.prompt) > self.cfg.prefill_len:
+            raise ValueError("prompt longer than prefill_len")
+        self.queue.append(req)
+
+    def _positions(self, pos: Array) -> Array:
+        if self._mrope:
+            return pos[..., None].repeat(3, -1)
+        return pos
+
+    def _admit(self):
+        """Prefill queued requests into free slots (one batched prefill)."""
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if not free or not self.queue:
+            return
+        take = min(len(free), len(self.queue))
+        slots = free[:take]
+        reqs = [self.queue.pop(0) for _ in range(take)]
+        b, pl = self.cfg.slots, self.cfg.prefill_len
+        tokens = np.zeros((b, pl), np.int32)
+        admitted = np.zeros((b,), bool)
+        for s, r in zip(slots, reqs):
+            tokens[s, : len(r.prompt)] = r.prompt      # right-pad
+            admitted[s] = True
+            self.slot_req[s] = r
+        pos = np.arange(pl, dtype=np.int32)[None, :].repeat(b, 0)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": self._positions(jnp.asarray(pos))}
+        for name, (shape_fn, dtype, _ax) in self.bundle.extra_inputs.items():
+            batch[name] = jnp.zeros(shape_fn(b, pl), dtype)
+
+        old_caches = self.caches
+        hidden, new_caches = self._prefill(
+            self.params, batch, old_caches, jnp.zeros((b,), jnp.int32))
+        # non-admitted slots keep their previous cache (slot isolation)
+        self.caches = self._merge(new_caches, old_caches,
+                                  jnp.asarray(admitted))
+        # sample each admitted slot at its true last-prompt position
+        last_idx = np.array(
+            [len(self.slot_req[s].prompt) - 1 if admitted[s] else 0
+             for s in range(b)])
+        last_hidden = hidden[jnp.arange(b), jnp.asarray(last_idx)]
+        logits = self.bundle.logits(self.params, last_hidden)
+        first = self._sample(logits, last_hidden)
+        for s, r in zip(slots, reqs):
+            r.output.append(int(first[s]))
+            self.lengths[s] = len(r.prompt)
+
+    def _sample(self, logits: Array, hidden: Array | None = None) -> np.ndarray:
+        if self.logits_hook is not None:
+            logits = self.logits_hook(logits, hidden)
+        if self.cfg.greedy:
+            return np.asarray(jnp.argmax(logits, -1))
+        self._rng, k = jax.random.split(self._rng)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.cfg.temperature, axis=-1))
+
+    def step(self) -> bool:
+        """One engine tick: admit, then one decode step for all slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        self.ticks += 1
+        last = np.zeros((self.cfg.slots, 1), np.int32)
+        for i in active:
+            last[i, 0] = self.slot_req[i].output[-1]
+        pos = jnp.asarray(self.lengths[:, None], jnp.int32)
+        logits, hidden, self.caches = self._decode(
+            self.params, jnp.asarray(last), self._positions(pos),
+            self.caches, jnp.asarray(self.lengths))
+        nxt = self._sample(logits, hidden)
+        for i in active:
+            r = self.slot_req[i]
+            tok = int(nxt[i])
+            r.output.append(tok)
+            self.lengths[i] += 1
+            hit_eos = tok == self.cfg.eos_token
+            full = (len(r.output) >= r.max_new_tokens
+                    or self.lengths[i] + 1 >= self.cfg.max_seq)
+            if hit_eos or full:
+                r.done = True
+                self.finished.append(r)
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+        return True
+
+    def run(self, max_ticks: int = 1000):
+        """Drive until queue + slots drain (or tick budget)."""
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break
+        return self.finished

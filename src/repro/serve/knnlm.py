@@ -1,0 +1,99 @@
+"""kNN-LM over a Bregman datastore — the paper's technique as a first-class
+serving feature.
+
+A datastore maps LM hidden states h_t to the token that FOLLOWED them in a
+reference corpus (Khandelwal et al. 2020).  At decode time the current
+hidden state queries the store's k nearest neighbors and the LM distribution
+is interpolated with the kNN distribution:
+
+    p(y) = (1 - lam) * p_LM(y) + lam * softmax_over_knn(-D(h, h_i) / T)
+
+Euclidean kNN is standard; exp-family embeddings motivate Bregman
+divergences, and this is precisely the paper's workload: hundreds of
+dimensions (d_model), millions of keys, exact-or-guaranteed retrieval.
+BrePartition's partition-filter-refine pipeline (core/search.py) serves the
+queries; the distributed path (dist/knn.py) shards the datastore over
+(pod, data) with subspaces on the model axis.
+
+``build_datastore`` runs teacher-forced prefills over a corpus and records
+(hidden, next_token) pairs; ``KNNLMHook`` plugs into serve/engine.py's
+``logits_hook``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as bp_search
+from repro.core.index import BallForest, build_index
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Datastore:
+    index: BallForest
+    next_tokens: np.ndarray     # (n,) int32 — token following each key
+    hidden_dim: int
+
+
+def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
+                    family: str = "squared_euclidean",
+                    m: int | None = None, seed: int = 0) -> Datastore:
+    """Teacher-forced pass over (num_seqs, seq_len) tokens -> datastore.
+
+    Keys: hidden state at position t; values: token at t+1.
+    """
+    num, s = corpus_tokens.shape
+    pos = np.arange(s, dtype=np.int32)[None, :].repeat(num, 0)
+    if getattr(bundle.cfg, "mrope_section", None):
+        pos = np.repeat(pos[..., None], 3, -1)
+    batch = {"tokens": jnp.asarray(corpus_tokens, jnp.int32),
+             "positions": jnp.asarray(pos)}
+    for name, (shape_fn, dtype, _ax) in bundle.extra_inputs.items():
+        batch[name] = jnp.zeros(shape_fn(num, s), dtype)
+    hidden, _ = jax.jit(bundle.forward_train)(params, batch)
+    keys = np.asarray(hidden[:, :-1].reshape(-1, hidden.shape[-1]),
+                      np.float32)
+    vals = np.asarray(corpus_tokens[:, 1:].reshape(-1), np.int32)
+    index = build_index(keys, family, m=m, seed=seed)
+    return Datastore(index=index, next_tokens=vals,
+                     hidden_dim=keys.shape[-1])
+
+
+@dataclasses.dataclass
+class KNNLMHook:
+    """``logits_hook`` for serve.engine.Engine: Bregman-kNN interpolation.
+
+    The engine passes (logits (B, V), hidden (B, D)); the hook retrieves
+    each row's k nearest datastore keys with BrePartition and mixes the
+    neighbor next-token distribution into the LM distribution.
+    """
+
+    store: Datastore
+    k: int = 8
+    lam: float = 0.25
+    temperature: float = 1.0
+    approx_p: float | None = None   # paper §8 approximate mode
+    queries_served: int = 0
+
+    def __call__(self, logits: Array, hidden: Array | None) -> Array:
+        if hidden is None:
+            return logits
+        h = jnp.asarray(hidden, jnp.float32)
+        res = bp_search.knn_batch(self.store.index, h, self.k,
+                                  approx_p=self.approx_p)
+        self.queries_served += int(h.shape[0])
+        knn_tokens = jnp.asarray(self.store.next_tokens)[res.ids]  # (B, k)
+        w = jax.nn.softmax(-res.dists / self.temperature, axis=-1)  # (B, k)
+        vocab = logits.shape[-1]
+        p_knn = jax.vmap(
+            lambda t, ww: jnp.zeros((vocab,), jnp.float32).at[t].add(ww)
+        )(knn_tokens, w)
+        p_lm = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        mix = (1.0 - self.lam) * p_lm + self.lam * p_knn
+        return jnp.log(jnp.maximum(mix, 1e-30))

@@ -1,0 +1,2 @@
+# Training substrate: optimizer, losses, the SPMD train step, fault-tolerant
+# checkpointing, and straggler monitoring.

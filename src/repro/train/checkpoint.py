@@ -1,0 +1,167 @@
+"""Fault-tolerant checkpointing: atomic shard files + elastic resharding.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json         tree structure, leaf shapes/dtypes, step meta
+        shard_000.npz ...     leaves chunked along their axis-0 into
+                              ``num_shards`` host files (multi-host analog:
+                              one file per checkpointing host)
+
+Guarantees:
+
+* **atomic**: writes go to ``step_X.tmp-<nonce>`` and are renamed into
+  place only after every shard + manifest is fsync'd — a crash mid-write
+  can never yield a directory that ``latest_step`` would pick up;
+* **elastic restore**: leaves are re-assembled to global arrays and
+  ``device_put`` with the CURRENT mesh's NamedShardings — restoring onto a
+  different device count / mesh shape than the writer's is the normal path
+  (tested: 8 -> 4 -> 8 host devices in tests/test_checkpoint.py);
+* **retention**: ``keep`` most recent steps survive a save.
+
+The data pipeline is step-addressable (data/pipeline.py), so restart from
+step k reproduces the exact batch sequence — restarts are bit-exact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "//"
+
+_NATIVE_DTYPES = {
+    "bool", "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "float32", "float64", "complex64", "complex128",
+}
+
+
+def _flatten_with_names(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        name = jax.tree_util.keystr(path)
+        out[name] = leaf
+    return out
+
+
+def _treedef_template(tree):
+    """JSON-able structure: replace leaves with their flat names."""
+    return jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(directory: str, step: int, state, *,
+                    num_shards: int = 4, keep: int = 3) -> str:
+    """Write ``state`` (pytree of arrays) atomically.  Returns final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:09d}.tmp-", dir=directory)
+
+    named = _flatten_with_names(state)
+    manifest = {"step": step, "num_shards": num_shards, "leaves": {}}
+    shards: list[dict] = [{} for _ in range(num_shards)]
+    for name, leaf in named.items():
+        arr = np.asarray(jax.device_get(leaf))
+        meta = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        if arr.dtype.kind == "V" or str(arr.dtype) not in _NATIVE_DTYPES:
+            # non-native dtypes (bfloat16, fp8): store raw bytes per shard
+            meta["raw"] = True
+            arr = np.frombuffer(arr.tobytes(), np.uint8).reshape(
+                arr.shape + (arr.dtype.itemsize,)) if arr.ndim else \
+                np.frombuffer(arr.tobytes(), np.uint8)
+        manifest["leaves"][name] = meta
+        if arr.ndim == 0 or arr.shape[0] < num_shards:
+            shards[0][name] = arr
+            meta["sharded"] = False
+        else:
+            meta["sharded"] = True
+            for i, piece in enumerate(np.array_split(arr, num_shards, axis=0)):
+                shards[i][name] = piece
+
+    for i, shard in enumerate(shards):
+        path = os.path.join(tmp, f"shard_{i:03d}.npz")
+        with open(path, "wb") as f:
+            np.savez(f, **{k.replace("/", SEP): v for k, v in shard.items()})
+            f.flush()
+            os.fsync(f.fileno())
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+    _apply_retention(directory, keep)
+    return final
+
+
+def _apply_retention(directory: str, keep: int):
+    steps = sorted(list_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and ".tmp-" not in name:
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, target, *,
+                       shardings=None):
+    """Restore into the structure of ``target`` (pytree of arrays/structs).
+
+    ``shardings``: optional congruent pytree of NamedShardings — the elastic
+    path: the restored global arrays are placed onto the CURRENT mesh
+    regardless of what the writer's mesh looked like.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    loaded: dict[str, list] = {}
+    for i in range(manifest["num_shards"]):
+        with np.load(os.path.join(path, f"shard_{i:03d}.npz")) as z:
+            for key in z.files:
+                loaded.setdefault(key.replace(SEP, "/"), []).append(z[key])
+
+    named_target = _flatten_with_names(target)
+    named_sh = (_flatten_with_names(shardings)
+                if shardings is not None else {})
+    out = {}
+    for name, tgt in named_target.items():
+        meta = manifest["leaves"][name]
+        pieces = loaded[name]
+        arr = (np.concatenate(pieces, axis=0)
+               if meta["sharded"] else pieces[0])
+        if meta.get("raw"):
+            import ml_dtypes  # ships with jax
+            dt = np.dtype(getattr(ml_dtypes, meta["dtype"]))
+            arr = np.frombuffer(arr.tobytes(), dt).reshape(meta["shape"])
+        assert list(arr.shape) == meta["shape"], (name, arr.shape, meta)
+        arr = arr.astype(arr.dtype if meta.get("raw") else meta["dtype"])
+        if name in named_sh:
+            out[name] = jax.device_put(arr, named_sh[name])
+        else:
+            out[name] = jnp.asarray(arr)
+    treedef = jax.tree_util.tree_structure(target)
+    order = [jax.tree_util.keystr(p)
+             for p, _ in jax.tree_util.tree_flatten_with_path(target)[0]]
+    return jax.tree_util.tree_unflatten(treedef, [out[n] for n in order])

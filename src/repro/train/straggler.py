@@ -1,0 +1,113 @@
+"""Straggler detection + mitigation policy (documented simulation).
+
+At pod scale, slow hosts (thermal throttling, failing HBM, noisy neighbors)
+show up as a heavy per-step latency tail.  This monitor implements the
+standard production loop:
+
+  1. track per-step wall time (and, when available, per-host step times —
+     on real multi-host JAX these come from
+     ``jax.process_index()``-tagged timing all-gathers; in this single-
+     process container the per-host times are SIMULATED by the tests);
+  2. flag a step/host as a straggler when it exceeds
+     ``median * tolerance`` over a sliding window;
+  3. trip a mitigation once ``patience`` consecutive flags accumulate.
+
+Mitigations are pluggable actions; the built-ins mirror what a real
+launcher would do (documented in DESIGN.md §4):
+
+* ``checkpoint_and_shrink`` — save, drop the slow host from the mesh, and
+  resume elastically (train/checkpoint.py restores onto the smaller mesh);
+* ``rebalance`` — shrink the slow host's data shard (skew the sampler);
+* ``alert`` — record only.
+
+The monitor itself is real and unit-tested; only the host-time *source* is
+simulated on this container (no second host exists to be slow).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    window: int = 50              # sliding window of step times
+    tolerance: float = 1.5        # flag if > tolerance * median
+    patience: int = 5             # consecutive flags before mitigation
+    warmup_steps: int = 10        # ignore compile/cache-warm steps
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    step_time: float
+    median: float
+    action: str
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 num_hosts: int = 1,
+                 mitigation: Callable[[StragglerEvent], None] | None = None):
+        self.cfg = cfg
+        self.num_hosts = num_hosts
+        self.mitigation = mitigation
+        self.times: list[deque] = [deque(maxlen=cfg.window)
+                                   for _ in range(num_hosts)]
+        self.flags = [0] * num_hosts
+        self.events: list[StragglerEvent] = []
+        self._step = 0
+        self._t0 = None
+
+    # -- wall-clock convenience for the training loop ------------------------
+    def start_step(self):
+        self._t0 = time.perf_counter()
+
+    def end_step(self, host_times: list[float] | None = None):
+        """Record a step.  ``host_times`` overrides wall time per host
+        (multi-host runs gather them; tests inject simulated values)."""
+        elapsed = time.perf_counter() - self._t0 if self._t0 else 0.0
+        if host_times is None:
+            host_times = [elapsed] * self.num_hosts
+        self._step += 1
+        if self._step <= self.cfg.warmup_steps:
+            return []
+        fired = []
+        for h, t in enumerate(host_times):
+            self.times[h].append(t)
+            med = _median(self.times[h])
+            if len(self.times[h]) >= 5 and t > self.cfg.tolerance * med:
+                self.flags[h] += 1
+            else:
+                self.flags[h] = 0
+            if self.flags[h] >= self.cfg.patience:
+                ev = StragglerEvent(step=self._step, host=h, step_time=t,
+                                    median=med, action="mitigate")
+                self.events.append(ev)
+                self.flags[h] = 0
+                if self.mitigation is not None:
+                    self.mitigation(ev)
+                fired.append(ev)
+        return fired
+
+    def summary(self) -> dict:
+        med = [_median(t) if t else 0.0 for t in self.times]
+        p99 = [_quantile(t, 0.99) if t else 0.0 for t in self.times]
+        return {"median": med, "p99": p99,
+                "events": len(self.events), "steps": self._step}
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def _quantile(xs, q: float) -> float:
+    s = sorted(xs)
+    i = min(len(s) - 1, int(q * len(s)))
+    return s[i]

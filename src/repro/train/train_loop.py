@@ -1,0 +1,171 @@
+"""The SPMD train step: microbatched, remat'd, fully sharded in and out.
+
+``make_train_step`` resolves every parameter / optimizer / batch array to a
+NamedSharding from its logical axes (dist/sharding.py) and returns an AOT-
+lowerable jitted step with EXPLICIT out_shardings — without them XLA SPMD
+happily decides that replicating a 72B-parameter gradient tree per device is
+acceptable (observed: +14 GB/device in the first dry-run of this repo).
+
+Gradient accumulation: python loop over microbatches (static count),
+averaged in f32.  Donation: the previous TrainState buffers are donated so
+params/moments update in place (halves peak optimizer memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.configs.common import ShapeSpec, batch_axes
+from . import losses, optimizer as opt_mod
+from .optimizer import AdamWState, OptimizerConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    loss_chunk: int = 512
+    z_weight: float = 1e-4
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def state_shardings(bundle, mesh: Mesh, rules=None) -> TrainState:
+    p_axes = bundle.param_axes()
+    p_structs = bundle.param_structs()
+    p_sh = shd.tree_shardings_for_structs(p_axes, p_structs, mesh, rules)
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=NamedSharding(mesh, P()), mu=p_sh, nu=p_sh))
+
+
+def batch_shardings(bundle, shape: ShapeSpec, mesh: Mesh, rules=None):
+    from repro.configs.common import batch_structs
+    return shd.tree_shardings_for_structs(
+        batch_axes(bundle, shape), batch_structs(bundle, shape), mesh, rules)
+
+
+def init_train_state(bundle, mesh: Mesh, key, rules=None) -> TrainState:
+    """Initialize params + moments directly into their shardings."""
+    sh = state_shardings(bundle, mesh, rules)
+
+    def build(key):
+        params = bundle.init(key)
+        return TrainState(params=params, opt=opt_mod.init_state(params))
+
+    return jax.jit(build, out_shardings=sh)(key)
+
+
+def _split_micro(batch: dict, n: int, i: int) -> dict:
+    def sl(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(sl, batch)
+
+
+def make_loss_fn(bundle, cfg: TrainConfig):
+    def loss_fn(params, batch):
+        hidden, aux = bundle.forward_train(params, batch)
+        table = params["embed"] if bundle.cfg.tie_embeddings \
+            else params["unembed"]
+        loss, metrics = losses.chunked_cross_entropy(
+            hidden, batch["labels"], table, chunk=cfg.loss_chunk,
+            z_weight=cfg.z_weight)
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+    return loss_fn
+
+
+def make_train_step(bundle, mesh: Mesh, cfg: TrainConfig, shape: ShapeSpec,
+                    rules=None):
+    """Build the jitted (state, batch) -> (state, metrics) step."""
+    loss_fn = make_loss_fn(bundle, cfg)
+    n_micro = cfg.microbatches
+
+    def step(state: TrainState, batch: dict):
+        # the activation-anchor context is live at trace time (see
+        # dist/sharding.constrain) — without it XLA SPMD replicates batch
+        # dims of the residual stream under fsdp weight sharding
+        ctx = shd.activation_rules(mesh, rules)
+        ctx.__enter__()
+        try:
+            return _step_inner(state, batch)
+        finally:
+            ctx.__exit__(None, None, None)
+
+    def _step_inner(state: TrainState, batch: dict):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def one_micro(mb):
+            (loss, metrics), grads = grad_fn(state.params, mb)
+            return loss, metrics, grads
+
+        if n_micro == 1:
+            loss, metrics, grads = one_micro(batch)
+            # anchor grads to the PARAM shardings: without this XLA emits
+            # per-layer f32 all-reduces over the data axis (observed: 384
+            # GB/device on qwen2.5 train) instead of reduce-scatters into
+            # the fsdp shards the optimizer update actually needs
+            grads = jax.lax.with_sharding_constraint(
+                grads, state_sh_params)
+        else:
+            acc = None
+            loss = 0.0
+            metrics = None
+            for i in range(n_micro):
+                l, m, g = one_micro(_split_micro(batch, n_micro, i))
+                g32 = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+                acc = g32 if acc is None else jax.tree.map(
+                    jnp.add, acc, g32)
+                loss = loss + l / n_micro
+                metrics = m if metrics is None else jax.tree.map(
+                    jnp.add, metrics, m)
+            grads = jax.tree.map(lambda x: x / n_micro, acc)
+            grads = jax.lax.with_sharding_constraint(grads, state_sh_params)
+            metrics = jax.tree.map(lambda x: x / n_micro, metrics)
+
+        new_params, new_opt, stats = opt_mod.apply_updates(
+            state.params, grads, state.opt, cfg.opt)
+        metrics = dict(metrics, loss=loss, **stats)
+        return TrainState(new_params, new_opt), metrics
+
+    state_sh = state_shardings(bundle, mesh, rules)
+    state_sh_params = state_sh.params
+    batch_sh = batch_shardings(bundle, shape, mesh, rules)
+    metrics_sh = None  # replicated scalars
+    return jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+
+
+def lower_train_step(bundle, mesh: Mesh, cfg: TrainConfig, shape: ShapeSpec,
+                     batch_structs: dict, rules=None):
+    """AOT path for the dry-run: lower without allocating anything."""
+    step = make_train_step(bundle, mesh, cfg, shape, rules)
+    with mesh:
+        return step.lower(_state_structs(bundle), batch_structs)
+
+
+def _state_structs(bundle) -> TrainState:
+    p = bundle.param_structs()
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return TrainState(
+        params=p,
+        opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                       mu=f32(p), nu=f32(p)))

@@ -1,0 +1,14 @@
+import os
+
+# Keep the default device count at 1 for smoke tests/benches (the dry-run
+# sets its own XLA_FLAGS in a fresh process — see launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

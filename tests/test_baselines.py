@@ -1,0 +1,65 @@
+"""Paper baselines (BBT, VAF) must be exact: compared against linear scan."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.bregman import get_family
+from repro.core.baselines import BBTree, VAFile, linear_scan
+
+
+def _data(family, n=400, d=12, seed=0):
+    fam = get_family(family)
+    return np.asarray(fam.sample(jax.random.PRNGKey(seed), (n, d))), fam
+
+
+@pytest.mark.parametrize("family", ["squared_euclidean", "itakura_saito",
+                                    "exponential"])
+@pytest.mark.parametrize("bound", ["geodesic", "tuple"])
+def test_bbtree_exact(family, bound):
+    data, fam = _data(family)
+    tree = BBTree(data, family, leaf_size=16, bound=bound)
+    for qi in range(5):
+        y = data[qi * 7]
+        ids, dists, stats = tree.knn(y, 5)
+        lin_ids, lin_d, _ = linear_scan(data, y, 5, family)
+        np.testing.assert_allclose(np.sort(dists), np.sort(lin_d),
+                                   rtol=1e-6, atol=1e-8)
+        assert stats["distance_evals"] <= len(data)
+
+
+@pytest.mark.parametrize("family", ["squared_euclidean", "itakura_saito"])
+def test_bbtree_range_query(family):
+    data, fam = _data(family, n=300)
+    tree = BBTree(data, family, leaf_size=16)
+    y = data[3]
+    dist = np.asarray(fam.distance(data, y[None]))
+    r = float(np.quantile(dist, 0.1))
+    ids, stats = tree.range_query(y, r)
+    want = np.sort(np.flatnonzero(dist <= r))
+    np.testing.assert_array_equal(ids, want)
+
+
+@pytest.mark.parametrize("family", ["squared_euclidean", "itakura_saito",
+                                    "exponential"])
+def test_vafile_exact(family):
+    data, fam = _data(family, n=500, d=10)
+    vaf = VAFile(data, family, bits=4)
+    for qi in range(5):
+        y = data[qi * 11]
+        ids, dists, stats = vaf.knn(y, 5)
+        _, lin_d, _ = linear_scan(data, y, 5, family)
+        np.testing.assert_allclose(np.sort(dists), np.sort(lin_d),
+                                   rtol=1e-6, atol=1e-8)
+        assert stats["candidates"] <= len(data)
+
+
+def test_bbtree_prunes():
+    """On clustered data the tree must evaluate far fewer than n distances."""
+    rng = np.random.default_rng(0)
+    centers = rng.normal(scale=10.0, size=(8, 8))
+    data = (centers[rng.integers(0, 8, 2000)]
+            + rng.normal(scale=0.1, size=(2000, 8)))
+    tree = BBTree(data, "squared_euclidean", leaf_size=32)
+    _, _, stats = tree.knn(data[0], 3)
+    assert stats["distance_evals"] < 800, stats

@@ -1,0 +1,132 @@
+"""Theorems 1-3 + transforms: correctness and property tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+from repro.core.bregman import get_family, family_names
+from repro.core.transform import make_partition, p_transform, q_transform
+
+FAMILIES = family_names()
+
+
+def _sample(fam, key, shape, scale=1.0):
+    return np.asarray(fam.sample(jax.random.PRNGKey(key), shape, scale))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_distance_nonnegative_and_zero_at_identity(family):
+    fam = get_family(family)
+    x = _sample(fam, 0, (64, 16))
+    y = _sample(fam, 1, (16,))
+    d = np.asarray(fam.distance(jnp.asarray(x), jnp.asarray(y)[None]))
+    assert np.all(d >= -1e-4)
+    d_self = np.asarray(fam.distance(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_allclose(d_self, 0.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("m", [1, 3, 4, 16])
+def test_theorem_1_2_upper_bound(family, m):
+    """UB from partitioned tuples dominates the true Bregman distance."""
+    fam = get_family(family)
+    d = 16
+    x = _sample(fam, 2, (128, d))
+    y = _sample(fam, 3, (d,))
+    part = make_partition(d, m)
+    p = p_transform(jnp.asarray(x), part, fam)
+    q = q_transform(jnp.asarray(y), part, fam)
+    q1 = {k: v[None] for k, v in q.items() if v.ndim == 1}
+    ub = np.asarray(jnp.sum(bounds.ub_components(p, q1), -1))
+    lb = np.asarray(jnp.sum(bounds.lb_components(p, q1), -1))
+    dist = np.asarray(fam.distance(jnp.asarray(x), jnp.asarray(y)[None]))
+    assert np.all(ub >= dist - 1e-3 * np.maximum(1, np.abs(dist)))
+    assert np.all(lb <= dist + 1e-3 * np.maximum(1, np.abs(dist)))
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_partition_sums_match_full_distance(family):
+    """Separability: sum of subspace distances == full distance."""
+    fam = get_family(family)
+    d, m = 20, 6  # non-divisible -> exercises padding masks
+    x = _sample(fam, 4, (8, d))
+    y = _sample(fam, 5, (d,))
+    part = make_partition(d, m)
+    xs = part.gather(jnp.asarray(x))
+    ys = part.gather(jnp.asarray(y))
+    mask = part.subspace_mask()
+    per_sub = fam.distance_masked(xs, ys[None], mask[None])  # (8, M)
+    total = np.asarray(jnp.sum(per_sub, -1))
+    full = np.asarray(fam.distance(jnp.asarray(x), jnp.asarray(y)[None]))
+    np.testing.assert_allclose(total, full, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_refine_distance_matches_direct(family):
+    fam = get_family(family)
+    d = 24
+    x = jnp.asarray(_sample(fam, 6, (32, d)))
+    y = jnp.asarray(_sample(fam, 7, (d,)))
+    q = bounds.query_refine_constants(y, fam)
+    got = np.asarray(bounds.refine_distance(x, q, fam))
+    want = np.asarray(fam.distance(x, y[None]))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_qb_determine_structure():
+    fam = get_family("squared_euclidean")
+    d, m, k = 12, 4, 5
+    x = jnp.asarray(_sample(fam, 8, (200, d)))
+    y = jnp.asarray(_sample(fam, 9, (d,)))
+    part = make_partition(d, m)
+    p = p_transform(x, part, fam)
+    q = q_transform(y, part, fam)
+    out = bounds.qb_determine(p, q, k)
+    # tau equals the sum of its per-subspace components
+    np.testing.assert_allclose(float(jnp.sum(out["qb"])), float(out["tau"]),
+                               rtol=1e-5)
+    # tau is the kth smallest total
+    totals = np.sort(np.asarray(bounds.ub_total(
+        p, {kk: vv[None] for kk, vv in q.items() if vv.ndim == 1})))
+    np.testing.assert_allclose(float(out["tau"]), totals[k - 1], rtol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    family=st.sampled_from(FAMILIES),
+    d=st.integers(2, 32),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_cauchy_bound_holds(family, d, m, seed):
+    """Hypothesis: for random valid data, UB >= D_f >= LB >= 0-side holds."""
+    m = min(m, d)
+    fam = get_family(family)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = fam.sample(k1, (16, d), scale=1.5)
+    y = fam.sample(k2, (d,), scale=1.5)
+    part = make_partition(d, m)
+    p = p_transform(x, part, fam)
+    q = q_transform(y, part, fam)
+    q1 = {k: v[None] for k, v in q.items() if v.ndim == 1}
+    ub = np.asarray(jnp.sum(bounds.ub_components(p, q1), -1))
+    dist = np.asarray(fam.distance(x, y[None]))
+    tol = 1e-3 * np.maximum(1.0, np.abs(dist)) + 1e-3
+    assert np.all(ub >= dist - tol), (family, d, m)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(2, 40),
+    m=st.integers(1, 12),
+)
+def test_property_partition_covers_all_dims(d, m):
+    m = min(m, d)
+    part = make_partition(d, m)
+    covered = part.idx.reshape(-1)[part.mask.reshape(-1) > 0]
+    assert sorted(covered.tolist()) == list(range(d))
+    assert part.mask.sum() == d

@@ -1,0 +1,119 @@
+"""Pallas kernels (interpret=True) vs pure-jnp ref oracles: shape/dtype sweeps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bregman_ub import bregman_ub_matrix
+from repro.kernels.bregman_dist import bregman_refine
+from repro.kernels.pccp_corr import pccp_correlation
+from repro.kernels.flash_attention import flash_attention
+from repro.core.bregman import get_family
+
+
+# ---------------------------------------------------------------------------
+# bregman_ub
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,q", [(64, 8, 1), (100, 28, 3), (513, 50, 5),
+                                   (32, 1, 1), (7, 5, 2)])
+def test_ub_kernel_shapes(n, m, q):
+    rng = np.random.default_rng(0)
+    alpha = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    sg = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    got = bregman_ub_matrix(alpha, sg, jnp.sum(qc, -1), sd,
+                            block_n=32, block_q=4, interpret=True)
+    want = ref.bregman_ub_matrix(alpha, sg, qc, sd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_ub_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    alpha = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    sg = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    got = bregman_ub_matrix(alpha, sg, jnp.sum(qc, -1), sd, interpret=True)
+    want = ref.bregman_ub_matrix(alpha, sg, qc, sd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bregman_dist (refinement)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["squared_euclidean", "itakura_saito",
+                                    "exponential", "burg", "shannon"])
+@pytest.mark.parametrize("b,d", [(16, 24), (100, 128), (33, 300)])
+def test_refine_kernel(family, b, d):
+    fam = get_family(family)
+    key = jax.random.PRNGKey(1)
+    rows = fam.sample(key, (b, d))
+    y = fam.sample(jax.random.PRNGKey(2), (d,))
+    grad = fam.phi_prime(y)
+    c_y = jnp.sum(y * grad) - fam.f(y)
+    got = bregman_refine(rows, grad, c_y, family,
+                         block_b=16, block_d=64, interpret=True)
+    want = ref.bregman_refine(rows, grad, c_y, family)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # also against the direct definition
+    direct = fam.distance(rows, y[None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(direct),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# pccp_corr
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(100, 8), (257, 40), (64, 129)])
+def test_corr_kernel(n, d):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    got = pccp_correlation(x, block_d=16, block_n=64, interpret=True)
+    want = ref.pccp_correlation(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,sq,skv,d,causal,window",
+    [
+        (2, 4, 4, 64, 64, 32, True, None),      # MHA causal
+        (1, 8, 2, 64, 64, 32, True, None),      # GQA 4:1
+        (2, 4, 1, 32, 32, 16, True, None),      # MQA
+        (1, 4, 4, 64, 64, 32, False, None),     # bidirectional (encoder)
+        (1, 4, 2, 64, 64, 32, True, 16),        # sliding window
+        (2, 4, 2, 1, 96, 32, True, None),       # decode: 1 new token vs cache
+        (1, 2, 2, 48, 48, 32, True, None),      # non-pow2 seq (padding path)
+    ],
+)
+def test_flash_attention(b, h, kh, sq, skv, d, causal, window, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, sq, d), dtype)
+    k = jax.random.normal(kk, (b, kh, skv, d), dtype)
+    v = jax.random.normal(kv, (b, kh, skv, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_kv=32, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)

@@ -1,0 +1,67 @@
+"""Reduced-config lowering smoke: the dry-run machinery end-to-end on a
+16-device host mesh (subprocess — device-count isolation)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import sys
+    sys.path.insert(0, %r)
+    import dataclasses
+    import jax
+    from repro import configs
+    from repro.configs.common import ShapeSpec
+    from repro.launch import hlo_analysis as ha
+    from repro.launch import lowering
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    cells = [
+        ("starcoder2-3b", ShapeSpec("t", 64, 8, "train")),
+        ("rwkv6-1.6b", ShapeSpec("t", 64, 8, "train")),
+        ("qwen3-moe-30b-a3b", ShapeSpec("t", 64, 8, "train")),
+        ("recurrentgemma-2b", ShapeSpec("d", 64, 8, "decode")),
+        ("whisper-tiny", ShapeSpec("p", 64, 8, "prefill")),
+    ]
+    for arch, shape in cells:
+        cfg = configs.get_reduced(arch)
+        cfg = dataclasses.replace(cfg, scan_layers=False) \\
+            if hasattr(cfg, "scan_layers") else cfg
+        low = lowering.lower_cell(arch, shape.name, mesh, config=cfg,
+                                  shape=shape)
+        compiled = low.compile()
+        costs = ha.analyze_text(compiled.as_text())
+        out[f"{arch}/{shape.kind}"] = {
+            "flops": costs.flops, "bytes": costs.bytes,
+            "coll": costs.collective_bytes,
+            "unknown_loops": costs.unknown_loops,
+        }
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.timeout(580)
+def test_reduced_cells_lower_compile_and_analyze():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT % src], env=env,
+                         capture_output=True, text=True, timeout=570)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert len(res) == 5
+    for cell, costs in res.items():
+        assert costs["flops"] > 0, cell
+        assert costs["bytes"] > 0, cell
+        # every cell on a >1-device mesh must communicate something
+        assert costs["coll"] > 0, cell

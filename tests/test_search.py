@@ -1,0 +1,109 @@
+"""Exact search == brute force; approximate search recall; M*/PCCP sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bregman import get_family
+from repro.core.index import build_index
+from repro.core import search
+from repro.core.partition import fit_cost_model, correlation_matrix, pccp_order
+
+
+def _dataset(family, n=600, d=24, seed=0):
+    fam = get_family(family)
+    data = fam.sample(jax.random.PRNGKey(seed), (n, d), scale=1.0)
+    queries = fam.sample(jax.random.PRNGKey(seed + 1), (8, d), scale=1.0)
+    return np.asarray(data), np.asarray(queries), fam
+
+
+@pytest.mark.parametrize("family", ["squared_euclidean", "itakura_saito",
+                                    "exponential"])
+@pytest.mark.parametrize("pccp", [True, False])
+def test_exact_knn_matches_brute_force(family, pccp):
+    data, queries, fam = _dataset(family)
+    index = build_index(data, family, m=4, pccp=pccp, num_clusters=16, seed=0)
+    k = 7
+    for qi in range(queries.shape[0]):
+        y = queries[qi]
+        res = search.knn(index, y, k)
+        assert bool(res.exact)
+        bf_idx, bf_dist = search.brute_force_knn(data, y, k, fam)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.dists)), np.sort(np.asarray(bf_dist)),
+            rtol=2e-3, atol=2e-3)
+        # ids must reproduce the distances when evaluated directly
+        direct = np.asarray(fam.distance(
+            jnp.asarray(data)[np.asarray(res.ids)], jnp.asarray(y)[None]))
+        np.testing.assert_allclose(np.sort(direct),
+                                   np.sort(np.asarray(res.dists)),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_exact_knn_budget_escape_hatch():
+    data, queries, fam = _dataset("squared_euclidean", n=400)
+    index = build_index(data, "squared_euclidean", m=4, num_clusters=8)
+    res = search.knn(index, queries[0], 5, budget=8)  # deliberately tiny
+    assert bool(res.exact)  # wrapper must have retried with larger budgets
+    bf_idx, bf_dist = search.brute_force_knn(data, queries[0], 5, fam)
+    np.testing.assert_allclose(np.sort(np.asarray(res.dists)),
+                               np.sort(np.asarray(bf_dist)), rtol=2e-3)
+
+
+def test_batch_knn():
+    data, queries, fam = _dataset("exponential", n=500)
+    index = build_index(data, "exponential", m=4, num_clusters=16)
+    res = search.knn_batch(index, queries, 5)
+    assert res.ids.shape == (queries.shape[0], 5)
+    for qi in range(queries.shape[0]):
+        _, bf_dist = search.brute_force_knn(data, queries[qi], 5, fam)
+        np.testing.assert_allclose(np.sort(np.asarray(res.dists[qi])),
+                                   np.sort(np.asarray(bf_dist)),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("p", [0.7, 0.9])
+def test_approximate_knn_recall(p):
+    data, queries, fam = _dataset("squared_euclidean", n=800, seed=3)
+    index = build_index(data, "squared_euclidean", m=4, num_clusters=16)
+    k = 10
+    recalls, cand_exact, cand_approx = [], [], []
+    for qi in range(queries.shape[0]):
+        y = queries[qi]
+        exact = search.knn(index, y, k)
+        approx = search.knn(index, y, k, approx_p=p)
+        got = set(np.asarray(approx.ids).tolist())
+        want = set(np.asarray(exact.ids).tolist())
+        recalls.append(len(got & want) / k)
+        cand_exact.append(int(exact.num_candidates))
+        cand_approx.append(int(approx.num_candidates))
+    # probability-guarantee semantics: average recall should be >= ~p
+    assert np.mean(recalls) >= p - 0.15, recalls
+    # the tightened bound must not grow the candidate set
+    assert np.mean(cand_approx) <= np.mean(cand_exact) + 1e-9
+
+
+def test_mstar_cost_model_sane():
+    data, _, fam = _dataset("squared_euclidean", n=500, d=32)
+    model = fit_cost_model(data, fam, seed=0)
+    assert 0 < model.alpha < 1
+    assert model.a > 0 and model.beta > 0
+    m = model.m_star()
+    assert 1 <= m <= 32
+    # cost at M* is no worse than the extremes
+    assert model.online_cost(m) <= model.online_cost(1) + 1e-6 or \
+           model.online_cost(m) <= model.online_cost(32) + 1e-6
+
+
+def test_pccp_separates_correlated_dims():
+    """Two perfectly correlated dims must land in different partitions."""
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(500, 4))
+    # dims 0&1 correlated, dims 2&3 correlated
+    data = np.stack([base[:, 0], base[:, 0] + 0.01 * base[:, 1],
+                     base[:, 2], base[:, 2] + 0.01 * base[:, 3]], axis=1)
+    corr = correlation_matrix(data)
+    order = pccp_order(corr, m=2, seed=0)
+    part0 = set(order[:2].tolist())
+    assert part0 not in ({0, 1}, {2, 3}), order

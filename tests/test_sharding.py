@@ -1,0 +1,97 @@
+"""Property tests for the sharding layer (hypothesis) + constrain no-op."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh
+
+from repro.dist import sharding as shd
+
+
+def _mesh(shape, axes):
+    # abstract mesh over a device grid — never touches the backend count
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = _mesh((16, 16), ("data", "model"))
+MESH3 = _mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+@given(
+    batch=st.sampled_from([1, 2, 16, 32, 128, 256]),
+    seq=st.sampled_from([1, 8, 4096, 32768, 100]),
+    heads=st.sampled_from([6, 8, 16, 24, 32, 64]),
+    hd=st.sampled_from([64, 128]),
+)
+@settings(max_examples=60, deadline=None)
+def test_spec_properties(batch, seq, heads, hd):
+    for mesh in (MESH, MESH3):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        spec = shd.spec_for_shape(("batch", "seq", "heads", "head_dim"),
+                                  (batch, seq, heads, hd), mesh)
+        dims = (batch, seq, heads, hd)
+        used = []
+        for dim, entry in zip(dims, tuple(spec) + (None,) * (4 - len(spec))):
+            axes = (entry,) if isinstance(entry, str) else (entry or ())
+            prod = 1
+            for a in axes:
+                assert a in mesh.axis_names
+                assert a not in used, "mesh axis used twice"
+                used.append(a)
+                prod *= sizes[a]
+            assert dim % prod == 0, (dim, axes, "indivisible sharding")
+        # priority: if heads could take `model`, it must have (not seq)
+        if heads % sizes["model"] == 0:
+            flat = [e for e in tuple(spec)]
+            assert flat[2] == "model" or (isinstance(flat[2], tuple)
+                                          and "model" in flat[2])
+
+
+def test_priority_context_parallel_fallback():
+    # starcoder2-like: 24 heads cannot take model=16 -> seq gets it
+    spec = shd.spec_for_shape(("batch", "seq", "heads", "head_dim"),
+                              (256, 4096, 24, 128), MESH)
+    assert tuple(spec)[1] == "model"
+    assert tuple(spec)[2] is None
+    # qwen3-like: 64 heads take model; seq stays unsharded
+    spec = shd.spec_for_shape(("batch", "seq", "heads", "head_dim"),
+                              (256, 4096, 64, 128), MESH)
+    assert tuple(spec)[1] is None
+    assert tuple(spec)[2] == "model"
+
+
+def test_residual_stream_gets_sequence_parallel():
+    spec = shd.spec_for_shape(("batch", "seq", "embed"),
+                              (256, 4096, 5120), MESH)
+    assert tuple(spec) == ("data", "model", None)
+
+
+def test_multipod_batch_spans_pod_and_data():
+    spec = shd.spec_for_shape(("batch", "seq", "embed"),
+                              (256, 4096, 5120), MESH3)
+    assert tuple(spec)[0] == ("pod", "data")
+    # batch=1 (long_500k): everything about batch replicated
+    spec1 = shd.spec_for_shape(("batch", "seq", "embed"),
+                               (1, 4096, 5120), MESH3)
+    assert tuple(spec1)[0] is None
+
+
+def test_kv_heads_indivisible_replicated():
+    spec = shd.spec_for_shape(("fsdp", "kv_heads", "head_dim"),
+                              (5120, 8, 128), MESH)
+    assert tuple(spec) == ("data", None, None)
+
+
+def test_constrain_is_identity_without_context():
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, ("batch", "embed"))
+    assert y is x
+
+
+def test_serve_rules_drop_fsdp():
+    spec = shd.spec_for_shape(("fsdp", "mlp"), (5120, 27648), MESH,
+                              shd.SERVE_RULES)
+    assert tuple(spec) == (None, "model")
