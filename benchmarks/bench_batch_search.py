@@ -1,0 +1,62 @@
+"""Batched-query throughput: fused knn_search_batch vs vmapped per-query.
+
+Measures queries/sec for q in {1, 8, 64, 256} on one synthetic dataset so
+BENCH json tracks batch throughput over time.  The baseline is the honest
+pre-fusion batch path — ``jax.vmap`` of the single-query jit core at the
+same static budget — which pays per-query cluster-pruning gathers and a
+full-n budget top_k per query; the fused pipeline replaces those with one
+broadcasted compare and a cumsum compaction (core/search.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bregman import get_family
+from repro.core.index import build_index
+from repro.core import search
+
+from .common import Row, timeit
+
+BATCH_SIZES = (1, 8, 64, 256)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget"))
+def _vmapped_baseline(index, ys, k, budget):
+    return jax.vmap(lambda y: search.knn_search(index, y, k, budget))(ys)
+
+
+def run(scale: float = 1.0):
+    n = max(512, int(8192 * scale))
+    d, m, k = 64, 8, 10
+    fam = get_family("squared_euclidean")
+    data = np.asarray(fam.sample(jax.random.PRNGKey(0), (n, d), scale=1.0))
+    index = build_index(data, "squared_euclidean", m=m, num_clusters=64,
+                        seed=0)
+    budget = search.default_budget(index, k)
+
+    rows = []
+    for q in BATCH_SIZES:
+        ys = jnp.asarray(np.asarray(
+            fam.sample(jax.random.PRNGKey(1), (q, d), scale=1.0)))
+        us_base = timeit(lambda: _vmapped_baseline(index, ys, k, budget),
+                         repeats=5)
+        us_fused = timeit(
+            lambda: search.knn_search_batch(index, ys, k, budget), repeats=5)
+        qps_base = q / (us_base / 1e6)
+        qps_fused = q / (us_fused / 1e6)
+        rows.append(Row("batch_search", f"vmap_q{q}", us_base,
+                        {"n": n, "qps": round(qps_base, 1)}))
+        rows.append(Row("batch_search", f"fused_q{q}", us_fused,
+                        {"n": n, "qps": round(qps_fused, 1),
+                         "speedup": round(us_base / us_fused, 2)}))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

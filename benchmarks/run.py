@@ -22,6 +22,7 @@ MODULES = [
     "bench_dimensionality",  # Fig. 13
     "bench_datasize",        # Fig. 14
     "bench_approx",          # Fig. 15
+    "bench_batch_search",    # fused batch pipeline vs vmapped per-query
     "bench_kernels",         # kernel micro-benches
 ]
 

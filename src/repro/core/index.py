@@ -50,6 +50,8 @@ class BallForest:
     counts: Array         # (M, C)
     centers: Array        # (M, C, w) cluster centers (diagnostics/benchmarks)
     beta_samples: Array   # (S,) sorted empirical beta_xy sample (approx search)
+    alpha_min_pt: Array       # (n, M)  own-cluster corner alpha_min per point
+    sqrt_gamma_max_pt: Array  # (n, M)  own-cluster corner sqrt_gamma_max per point
 
     @property
     def family(self) -> BregmanFamily:
@@ -70,7 +72,8 @@ class BallForest:
     def tree_flatten(self):
         dyn = (self.data, self.point_ids, self.alpha, self.sqrt_gamma,
                self.assign, self.alpha_min, self.sqrt_gamma_max, self.counts,
-               self.centers, self.beta_samples)
+               self.centers, self.beta_samples, self.alpha_min_pt,
+               self.sqrt_gamma_max_pt)
         static = (self.family_name, self.partition, self.num_clusters)
         return dyn, static
 
@@ -180,6 +183,16 @@ def build_index(
         for i in range(m)
     ])
 
+    # Per-point view of the bucketed corners: alpha_min_pt[p, i] is the
+    # corner of the bucket point p lives in for subspace i.  Gathering this
+    # ONCE at build time makes the batched query-time cluster pruning
+    # (core/search.py knn_search_batch) a pure elementwise compare — no
+    # query-time gathers over (n, M, q).
+    amin_pt = jax.vmap(lambda a, s: a[s], in_axes=(0, 1), out_axes=1)(
+        amin, assign_eff)                           # (n, M)
+    gmax_pt = jax.vmap(lambda a, s: a[s], in_axes=(0, 1), out_axes=1)(
+        gmax, assign_eff)                           # (n, M)
+
     # Empirical beta_xy sample for the approximate search (Prop. 1): the CDF
     # of the cross term over random (data, query) pairs.
     rng = np.random.default_rng(seed)
@@ -204,4 +217,6 @@ def build_index(
         counts=counts,
         centers=centers,
         beta_samples=beta_samples,
+        alpha_min_pt=amin_pt,
+        sqrt_gamma_max_pt=gmax_pt,
     )

@@ -15,12 +15,44 @@ Pipeline per query (Alg. 6):
      = union over subspaces (Theorem 3).
   5. Refine selected candidates with exact D_f (kernels/bregman_dist),
      global top-k.
+
+Batched pipeline (:func:`knn_search_batch`): a (q, d) query block runs the
+same five phases end-to-end as ONE jitted program instead of a vmap of the
+single-query core, with three structural differences that make it the
+serving fast path:
+
+  * **Filter** — the q per-query UB passes collapse onto a single
+    (n, M) x (M, q) ``bregman_ub_matrix`` call (the MXU matmul form), and
+    the per-column k smallest UBs are extracted by a *streaming* tiled
+    k-selection: a ``lax.scan`` over ``block_rows``-sized row blocks merges
+    each block's (bn, q) UB tile into a running (q, k) best set, so the
+    (n, q) f32 UB matrix never materializes.  (The prune/compact phases
+    below still hold a (n, q) bool mask and a (q, n) int32 cumsum — ~5
+    bytes per point-query pair; folding those into the same scan is the
+    remaining step to a fully O(block_rows * q) pipeline.)
+  * **Prune** — Theorem-3 cluster pruning uses the index's precomputed
+    per-point corner stats (``alpha_min_pt``/``sqrt_gamma_max_pt``,
+    core/index.py), turning the batched mask into one broadcasted
+    elementwise compare over (n-block, M, q) — zero query-time gathers,
+    versus the (q, n, M) gather storm the vmapped path pays.
+  * **Select** — candidates are compacted into the static budget by binary
+    search on the running member count (O(n) cumsum + O(budget log n)
+    searches per query) instead of a full-n ``top_k`` per
+    query.  Slot order is index order, not UB order; when the union
+    overflows the budget the overflowing queries are flagged ``exact=False``
+    and the host wrapper retries, exactly like the single-query path.
+
+Refinement then runs ONE batched kernel call over all queries' candidate
+rows (kernels/bregman_dist.bregman_refine_batch) with per-query grad/c_y
+tiles.  The §8 approximate mode's CDF shrink is vectorized over the batch.
+:func:`knn_batch` is the host wrapper: an iterative, capped
+budget-doubling loop shared by the whole batch.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
+import logging
 from typing import NamedTuple
 
 import jax
@@ -36,12 +68,19 @@ Array = jax.Array
 NEG_BIG = -1e30
 POS_BIG = 1e30
 
+logger = logging.getLogger(__name__)
+
+# Row-block size for the streaming batched filter; one block is the unit of
+# VMEM residency (the TPU analogue of the paper's disk page, sized so the
+# (block, q) UB tile plus the (block, M, q) prune tile stay on-chip).
+DEFAULT_BLOCK_ROWS = 4096
+
 
 class SearchResult(NamedTuple):
-    ids: Array          # (k,) original point ids
-    dists: Array        # (k,) exact Bregman distances
-    exact: Array        # () bool — candidate set fit in the budget
-    num_candidates: Array  # () int32 — Theorem-3 union size
+    ids: Array          # (k,) original point ids — (q, k) from the batch path
+    dists: Array        # (k,) exact Bregman distances — (q, k) batched
+    exact: Array        # () bool — candidate set fit in the budget; (q,) batched
+    num_candidates: Array  # () int32 — Theorem-3 union size; (q,) batched
 
 
 def _query_struct(index: BallForest, y: Array) -> dict:
@@ -51,38 +90,36 @@ def _query_struct(index: BallForest, y: Array) -> dict:
     return q
 
 
-def _candidate_mask(index: BallForest, q: dict, qb: Array) -> Array:
-    """Theorem-3 union membership via per-subspace cluster pruning. (n,) bool.
+def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
+                  sqrt_delta: Array, qb: Array, sub_axis: int) -> Array:
+    """THE Theorem-3 membership test, shared by every search path.
 
     Membership must be CLUSTER-granular: Theorem 3's pigeonhole argument
     bounds the per-subspace EXACT distance (D_i <= qb_i for some i), and
     the conservative cluster lower bound LB_c <= min_{x in c} D_i never
     prunes a cluster containing such a point.  (A per-point test on the
     Cauchy UPPER bound components is NOT valid — UB_i > qb_i for all i does
-    not contradict D <= tau.)  Tightness comes from the index's
-    gamma-bucketed corner stats (core/index.py): each ball contributes
-    ``num_buckets`` (alpha_min, sqrt_gamma_max) corners instead of one.
+    not contradict D <= tau.)  The cluster corners are evaluated through
+    the index's per-point view (``alpha_min_pt``/``sqrt_gamma_max_pt``,
+    gathered once at build time from the gamma-bucketed corner stats —
+    core/index.py), so the test is a pure broadcasted compare.  ``sub_axis``
+    names the subspace axis of the broadcasted operands.
     """
-    # Bucketed-corner lower bounds: (M, C_eff)
-    lb = (index.alpha_min + q["qconst"][:, None]
-          - index.sqrt_gamma_max * q["sqrt_delta"][:, None])
-    admitted = lb <= qb[:, None]                       # (M, C_eff) bool
-    # Per-point admission per subspace, then union.
-    per_sub = jax.vmap(lambda a, i: a[i], in_axes=(0, 1), out_axes=1)(
-        admitted, index.assign
-    )                                                  # (n, M)
-    return jnp.any(per_sub, axis=-1)
+    lb = amin_pt + qconst - gmax_pt * sqrt_delta
+    return jnp.any(lb <= qb, axis=sub_axis)
+
+
+def _candidate_mask(index: BallForest, q: dict, qb: Array) -> Array:
+    """Theorem-3 union membership for one query. (n,) bool."""
+    return _corner_admit(index.alpha_min_pt, index.sqrt_gamma_max_pt,
+                         q["qconst"], q["sqrt_delta"], qb, sub_axis=-1)
 
 
 def _refine(index: BallForest, q: dict, sel: Array, valid: Array, k: int):
-    """Exact distances for the selected rows; invalid rows pushed to +inf."""
-    from repro.kernels import ops as kernel_ops
-    rows = jnp.take(index.data, sel, axis=0)           # (budget, d)
-    dist = kernel_ops.bregman_refine(rows, q["grad"], q["c_y"], index.family_name)
-    dist = jnp.where(valid, dist, POS_BIG)
-    neg, pos = jax.lax.top_k(-dist, k)
-    ids = jnp.take(index.point_ids, jnp.take(sel, pos))
-    return ids, -neg
+    """Exact distances for one query's selected rows: the q=1 batch slice."""
+    qs1 = {"grad": q["grad"][None], "c_y": q["c_y"][None]}
+    ids, dists = _refine_batch(index, qs1, sel[None], valid[None], k)
+    return ids[0], dists[0]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
@@ -142,23 +179,7 @@ def knn_search_approx(
     kappa = jnp.sum(kappa_i)
     mu = jnp.sum(sqrt_term)
 
-    # Empirical CDF interpolation on the sorted beta sample.
-    samples = index.beta_samples
-    s = samples.shape[0]
-
-    def cdf(t):
-        return jnp.searchsorted(samples, t, side="right").astype(jnp.float32) / s
-
-    def inv_cdf(u):
-        pos = jnp.clip(u * (s - 1), 0.0, s - 1.0)
-        lo = jnp.floor(pos).astype(jnp.int32)
-        hi = jnp.minimum(lo + 1, s - 1)
-        w = pos - lo.astype(jnp.float32)
-        return samples[lo] * (1 - w) + samples[hi] * w
-
-    target = p_guarantee * cdf(mu) + (1.0 - p_guarantee) * cdf(-kappa)
-    c = jnp.clip(inv_cdf(target) / jnp.maximum(mu, 1e-12), 0.0, 1.0)
-
+    c = _cdf_shrink(index.beta_samples, mu, kappa, p_guarantee)
     qb_approx = kappa_i + c * sqrt_term                # shrunk bounds
 
     mask = _candidate_mask(index, q, qb_approx)
@@ -171,14 +192,225 @@ def knn_search_approx(
                         num_candidates=num_candidates)
 
 
+def _cdf_shrink(samples: Array, mu: Array, kappa: Array, p: Array) -> Array:
+    """§8 Prop.-1 shrink factor c from the empirical beta_xy CDF.
+
+    Vectorized: ``mu``/``kappa`` may be scalars (single query) or (q,)
+    batches; returns the same shape.
+    """
+    s = samples.shape[0]
+
+    def cdf(t):
+        return jnp.searchsorted(samples, t, side="right").astype(jnp.float32) / s
+
+    def inv_cdf(u):
+        pos = jnp.clip(u * (s - 1), 0.0, s - 1.0)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, s - 1)
+        w = pos - lo.astype(jnp.float32)
+        return samples[lo] * (1 - w) + samples[hi] * w
+
+    target = p * cdf(mu) + (1.0 - p) * cdf(-kappa)
+    return jnp.clip(inv_cdf(target) / jnp.maximum(mu, 1e-12), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Batched pipeline (the serving fast path)
+# ---------------------------------------------------------------------------
+
+def _block_layout(n: int, block_rows: int) -> tuple[int, int]:
+    """(block, num_blocks) covering n rows; block <= block_rows."""
+    bn = max(8, min(block_rows, n))
+    nb = -(-n // bn)
+    return bn, nb
+
+
+def _pad_blocks(arr: Array, bn: int, nb: int, fill: float = 0.0) -> Array:
+    """Pad (n, M) rows up to nb*bn with ``fill`` and reshape to (nb, bn, M)."""
+    pad = nb * bn - arr.shape[0]
+    return jnp.pad(arr, ((0, pad), (0, 0)),
+                   constant_values=fill).reshape(nb, bn, arr.shape[1])
+
+
+def _batch_filter_topk(index: BallForest, qs: dict, k: int,
+                       block_rows: int) -> tuple[Array, Array]:
+    """Streaming per-column k-selection over the (n, q) UB matrix.
+
+    One ``bregman_ub_matrix`` call per row block inside a scan; the carry is
+    the running (q, k) smallest totals + their global row indices, so peak
+    memory is O(block_rows * q) regardless of n.  Ties resolve to the lower
+    row index (carry rows precede the block in the merge concat), matching
+    ``lax.top_k`` over the full column.
+    """
+    from repro.kernels import ops as kernel_ops
+    n = index.alpha.shape[0]
+    q = qs["qconst"].shape[0]
+    bn, nb = _block_layout(n, block_rows)
+    alpha_b = _pad_blocks(index.alpha, bn, nb)
+    sg_b = _pad_blocks(index.sqrt_gamma, bn, nb)
+    offs = jnp.arange(nb, dtype=jnp.int32) * bn
+
+    def step(carry, blk):
+        best_v, best_i = carry                          # (q, k) each
+        a, sg, off = blk
+        vals = kernel_ops.bregman_ub_matrix(
+            a, sg, qs["qconst"], qs["sqrt_delta"])      # (bn, q)
+        gidx = off + jnp.arange(bn, dtype=jnp.int32)
+        vals = jnp.where((gidx < n)[:, None], vals, POS_BIG)
+        cand_v = jnp.concatenate([best_v, vals.T], axis=1)          # (q, k+bn)
+        cand_i = jnp.concatenate(
+            [best_i, jnp.broadcast_to(gidx[None, :], (q, bn))], axis=1)
+        neg, sel = jax.lax.top_k(-cand_v, k)
+        return (-neg, jnp.take_along_axis(cand_i, sel, axis=1)), None
+
+    init = (jnp.full((q, k), POS_BIG, jnp.float32),
+            jnp.zeros((q, k), jnp.int32))
+    (vals, idx), _ = jax.lax.scan(step, init, (alpha_b, sg_b, offs))
+    return vals, idx                                    # ascending along k
+
+
+def _candidate_mask_batch(index: BallForest, qs: dict, qb: Array,
+                          block_rows: int) -> Array:
+    """Batched Theorem-3 union membership -> (n, q) bool.
+
+    :func:`_corner_admit` broadcast over the query batch, chunked over row
+    blocks so the (block, M, q) intermediate bounds peak memory.
+    """
+    n = index.alpha_min_pt.shape[0]
+    q = qb.shape[0]
+    bn, nb = _block_layout(n, block_rows)
+    # Padded rows are sliced off below ([:n]); the +inf corner fill is
+    # belt-and-braces only (unlike _batch_filter_topk's padding, which is
+    # load-bearing via the gidx < n mask).
+    amin_b = _pad_blocks(index.alpha_min_pt, bn, nb, fill=POS_BIG)
+    gmax_b = _pad_blocks(index.sqrt_gamma_max_pt, bn, nb)
+    qc = qs["qconst"].T[None, :, :]                     # (1, M, q)
+    sd = qs["sqrt_delta"].T[None, :, :]                 # (1, M, q)
+    qbT = qb.T[None, :, :]                              # (1, M, q)
+
+    def block_mask(blk):
+        amin, gmax = blk                                # (bn, M)
+        return _corner_admit(amin[:, :, None], gmax[:, :, None],
+                             qc, sd, qbT, sub_axis=1)   # (bn, q)
+
+    mask = jax.lax.map(block_mask, (amin_b, gmax_b))    # (nb, bn, q)
+    return mask.reshape(nb * bn, q)[:n]
+
+
+def _compact_candidates(mask: Array, budget: int) -> tuple[Array, Array, Array]:
+    """Compact each query's union members into ``budget`` slots.
+
+    Slot s holds the s-th member in index order, found by binary search on
+    the running member count (``searchsorted(cumsum, s+1)``): O(n) cumsum +
+    O(budget log n) searches per query, with no full-n top_k and no scatter
+    (XLA CPU serializes scatters).  Returns (sel (q, budget) row indices,
+    valid (q, budget) bool, num_candidates (q,)).  Members beyond the
+    budget are dropped in index order; callers must check
+    ``num_candidates <= budget`` for exactness.
+    """
+    maskT = mask.T                                      # (q, n)
+    q, n = maskT.shape
+    csum = jnp.cumsum(maskT.astype(jnp.int32), axis=1)  # (q, n) nondecreasing
+    num_candidates = csum[:, -1]
+    targets = jnp.arange(1, budget + 1, dtype=jnp.int32)
+    sel = jax.vmap(lambda c: jnp.searchsorted(c, targets, side="left"))(csum)
+    sel = jnp.minimum(sel, n - 1).astype(jnp.int32)     # clamp empty slots
+    valid = targets[None, :] <= jnp.minimum(num_candidates, budget)[:, None]
+    return sel, valid, num_candidates
+
+
+def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
+                  k: int):
+    """One batched kernel call refines all queries' candidate rows."""
+    from repro.kernels import ops as kernel_ops
+    rows = jnp.take(index.data, sel, axis=0)            # (q, budget, d)
+    dist = kernel_ops.bregman_refine_batch(
+        rows, qs["grad"], qs["c_y"], index.family_name)  # (q, budget)
+    dist = jnp.where(valid, dist, POS_BIG)
+    neg, pos = jax.lax.top_k(-dist, k)                  # (q, k)
+    ids = jnp.take(index.point_ids,
+                   jnp.take_along_axis(sel, pos, axis=1))
+    return ids, -neg
+
+
+def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
+                           p_guarantee: Array | None,
+                           block_rows: int) -> SearchResult:
+    if k > index.n:
+        # The streaming merge always has >= k columns, so without this guard
+        # a too-large k would silently return sentinel rows as "exact".
+        raise ValueError(f"k={k} exceeds index size n={index.n}")
+    if budget < k:
+        raise ValueError(f"budget={budget} must be >= k={k} (the refine "
+                         "top-k needs at least k slots)")
+    if ys.ndim != 2:
+        raise ValueError(f"expected (q, d) queries, got {ys.shape}")
+    qs = _query_struct(index, ys)                       # all fields (q, ...)
+
+    # ---- phase 1+2: one fused filter matmul + streaming k-selection ----
+    # Only the k-th row index matters downstream: qb encodes the k-th UB.
+    _, idx = _batch_filter_topk(index, qs, k, block_rows)
+    kth = idx[:, -1]                                    # (q,)
+    kth_tuple = {"alpha": jnp.take(index.alpha, kth, axis=0),
+                 "sqrt_gamma": jnp.take(index.sqrt_gamma, kth, axis=0)}
+    sqrt_term = kth_tuple["sqrt_gamma"] * qs["sqrt_delta"]       # (q, M)
+    qb = bounds.ub_components(kth_tuple, qs)            # (q, M) Alg. 4
+
+    if p_guarantee is not None:                         # §8 shrink, batched
+        kappa_i = qb - sqrt_term
+        c = _cdf_shrink(index.beta_samples, jnp.sum(sqrt_term, -1),
+                        jnp.sum(kappa_i, -1), p_guarantee)
+        qb = kappa_i + c[:, None] * sqrt_term
+
+    # ---- phase 3: one broadcasted Theorem-3 prune for the whole batch ----
+    mask = _candidate_mask_batch(index, qs, qb, block_rows)
+
+    # ---- phase 4: static-budget compaction + one batched refine ----
+    sel, valid, num_candidates = _compact_candidates(mask, budget)
+    ids, dists = _refine_batch(index, qs, sel, valid, k)
+    return SearchResult(ids=ids, dists=dists,
+                        exact=num_candidates <= budget,
+                        num_candidates=num_candidates)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+def knn_search_batch(index: BallForest, ys: Array, k: int, budget: int,
+                     block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
+    """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
+    return _knn_search_batch_core(index, ys, k, budget, None, block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+def knn_search_batch_approx(
+    index: BallForest, ys: Array, k: int, budget: int, p_guarantee: Array,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> SearchResult:
+    """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q."""
+    return _knn_search_batch_core(index, ys, k, budget, p_guarantee,
+                                  block_rows)
+
+
 # ---------------------------------------------------------------------------
 # Host wrappers (escape hatch: double the budget until the union fits)
 # ---------------------------------------------------------------------------
+
+MAX_BUDGET_DOUBLINGS = 8
+
 
 def default_budget(index: BallForest, k: int) -> int:
     """Initial refine budget ~ the cost model's candidate estimate."""
     n = index.n
     return int(min(n, max(4 * k, 64, n // 16)))
+
+
+def fitted_budget(index: BallForest, k: int, needed: int) -> int:
+    """Smallest power-of-two budget (>= k, capped at n) covering ``needed``
+    candidates.  The ONE sizing rule for overflow handling: retries and
+    serving-side pinned budgets both use it, so they land on the same
+    static shapes and reuse each other's compiled programs.
+    """
+    need = max(int(needed), k, 1)
+    return int(min(index.n, 1 << (need - 1).bit_length()))
 
 
 def knn(index: BallForest, y, k: int, budget: int | None = None,
@@ -202,24 +434,67 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
 
 
 def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
-              approx_p: float | None = None):
-    """vmapped batch search (single retry policy across the batch)."""
+              approx_p: float | None = None, *,
+              max_doublings: int = MAX_BUDGET_DOUBLINGS,
+              block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
+    """Batched kNN via the fused :func:`knn_search_batch` pipeline.
+
+    One retry policy for the whole batch: if ANY query's Theorem-3 union
+    overflows, the block re-runs with a budget sized to the largest
+    observed union (``num_candidates`` is budget-independent, so one retry
+    normally resolves the overflow), rounded up to a power of two so
+    repeated budgets reuse compiled programs.  The loop is bounded by
+    ``max_doublings``; if exhausted, a warning is logged and the block
+    falls back to ONE fused brute-force scan (exact by construction, no
+    per-query dataset gather), preserving the invariant that exact-mode
+    results are exact and approx-mode results carry the §8 guarantee.
+    """
     ys = jnp.asarray(ys, jnp.float32)
+    if ys.ndim != 2:
+        raise ValueError(f"knn_batch wants (q, d) queries, got {ys.shape}")
     budget = budget or default_budget(index, k)
-    if approx_p is None:
-        fn = jax.vmap(lambda y: knn_search(index, y, k, budget))
-    else:
-        fn = jax.vmap(lambda y: knn_search_approx(index, y, k, budget,
-                                                  jnp.float32(approx_p)))
-    res = fn(ys)
-    if approx_p is None and not bool(jnp.all(res.exact)) and budget < index.n:
-        return knn_batch(index, ys, k, min(index.n, budget * 4), approx_p)
-    return res
+    p = None if approx_p is None else jnp.float32(approx_p)
+
+    def run(b):
+        if p is None:
+            return knn_search_batch(index, ys, k, b, block_rows)
+        return knn_search_batch_approx(index, ys, k, b, p, block_rows)
+
+    for attempt in range(max_doublings + 1):
+        res = run(budget)
+        if bool(jnp.all(res.exact)) or budget >= index.n:
+            return res
+        if attempt == max_doublings:
+            break
+        # needed > budget on overflow, so the fitted budget strictly grows.
+        budget = fitted_budget(index, k, int(jnp.max(res.num_candidates)))
+    logger.warning(
+        "knn_batch: budget cap exhausted after %d doublings (budget=%d, "
+        "%d/%d queries overflowed); escalating to a full linear scan "
+        "(n=%d)", max_doublings, budget,
+        int(jnp.sum(~res.exact)), ys.shape[0], index.n)
+    # Full scan instead of run(index.n): a budget=n refine would gather a
+    # (q, n, d) copy of the dataset; the fused brute-force distance needs
+    # no per-query row gather.  num_candidates (budget-independent) comes
+    # from the last capped run.
+    ids_layout, dists = brute_force_knn(index.data, ys, k, index.family)
+    return SearchResult(ids=jnp.take(index.point_ids, ids_layout),
+                        dists=dists,
+                        exact=jnp.ones(ys.shape[0], bool),
+                        num_candidates=res.num_candidates)
 
 
 def brute_force_knn(data, y, k: int, family) -> tuple[Array, Array]:
-    """Linear-scan oracle (used by tests and as the paper's baseline floor)."""
+    """Linear-scan oracle (used by tests and as the paper's baseline floor).
+
+    ``y`` may be a single (d,) query or a (q, d) batch; the batch form
+    returns ((q, k) ids, (q, k) dists) so tests and benchmarks share one
+    oracle with the batched pipeline.
+    """
     fam = get_family(family) if isinstance(family, str) else family
-    dist = fam.distance(jnp.asarray(data), jnp.asarray(y)[None, :])
+    y = jnp.asarray(y)
+    if y.ndim == 2:
+        return jax.vmap(lambda yy: brute_force_knn(data, yy, k, fam))(y)
+    dist = fam.distance(jnp.asarray(data), y[None, :])
     neg, idx = jax.lax.top_k(-dist, k)
     return idx, -neg

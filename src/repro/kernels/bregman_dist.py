@@ -30,27 +30,6 @@ _PHIS = {
 }
 
 
-def _make_kernel(phi):
-    def kernel(rows_ref, grad_ref, mask_ref, acc_ref):
-        j = pl.program_id(1)
-
-        @pl.when(j == 0)
-        def _init():
-            acc_ref[...] = jnp.zeros_like(acc_ref)
-
-        rows = rows_ref[...]                       # (bb, bd)
-        grad = grad_ref[...]                       # (1, bd)
-        mask = mask_ref[...]                       # (1, bd)
-        fx = jnp.sum(phi(rows) * mask, axis=-1, keepdims=True)      # VPU
-        cross = jnp.dot(rows, grad.T, preferred_element_type=jnp.float32)
-        acc_ref[...] += fx - cross                 # (bb, 1)
-
-    return kernel
-
-
-@functools.partial(
-    jax.jit, static_argnames=("family", "block_b", "block_d", "interpret")
-)
 def bregman_refine(
     rows: jax.Array,    # (b, d) candidate points
     grad: jax.Array,    # (d,)   phi'(y)
@@ -61,10 +40,56 @@ def bregman_refine(
     block_d: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    """Exact D_f(rows[i], y) -> (b,)."""
+    """Exact D_f(rows[i], y) -> (b,): the q=1 slice of the batch kernel.
+
+    Delegating keeps ONE kernel body (accumulation, family-specific safe
+    padding) serving both the single-query and batched search paths.
+    """
+    return bregman_refine_batch(
+        rows[None], grad[None], c_y[None], family,
+        block_b=block_b, block_d=block_d, interpret=interpret)[0]
+
+
+def _make_batch_kernel(phi):
+    def kernel(rows_ref, grad_ref, mask_ref, acc_ref):
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        rows = rows_ref[0]                         # (bb, bd)
+        grad = grad_ref[...]                       # (1, bd) — this query's tile
+        mask = mask_ref[...]                       # (1, bd)
+        fx = jnp.sum(phi(rows) * mask, axis=-1, keepdims=True)      # VPU
+        cross = jnp.dot(rows, grad.T, preferred_element_type=jnp.float32)
+        acc_ref[0] += fx - cross                   # (bb, 1)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "block_b", "block_d", "interpret")
+)
+def bregman_refine_batch(
+    rows: jax.Array,    # (q, b, d) per-query candidate rows
+    grad: jax.Array,    # (q, d)    per-query phi'(y)
+    c_y: jax.Array,     # (q,)      per-query additive constant
+    family: str,
+    *,
+    block_b: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact D_f(rows[q, i], y_q) -> (q, b): one call refines the whole batch.
+
+    The query axis rides the grid's outermost dimension, so every query's
+    candidate tile reuses the same compiled body with its own grad/c_y tile —
+    the batched analogue of :func:`bregman_refine` (one program, q x b rows).
+    """
     fam = get_family(family)
     phi = _PHIS[fam.name]
-    b, d = rows.shape
+    q, b, d = rows.shape
     bb = min(block_b, max(8, b))
     bd = min(block_d, max(128 if not interpret else 8, d))
     b_pad, d_pad = -b % bb, -d % bd
@@ -72,21 +97,21 @@ def bregman_refine(
     # Padded columns: rows padded with a domain-safe value, masked out of phi;
     # grad padded with 0 so the matmul ignores them.
     safe = 1.0 if fam.name in ("itakura_saito", "burg", "shannon") else 0.0
-    r = jnp.pad(rows, ((0, b_pad), (0, d_pad)), constant_values=safe)
-    g = jnp.pad(grad, (0, d_pad))[None, :]
+    r = jnp.pad(rows, ((0, 0), (0, b_pad), (0, d_pad)), constant_values=safe)
+    g = jnp.pad(grad, ((0, 0), (0, d_pad)))
     mask = jnp.pad(jnp.ones((1, d), rows.dtype), ((0, 0), (0, d_pad)))
-    bp, dp = r.shape
+    _, bp, dp = r.shape
 
     out = pl.pallas_call(
-        _make_kernel(phi),
-        grid=(bp // bb, dp // bd),
+        _make_batch_kernel(phi),
+        grid=(q, bp // bb, dp // bd),
         in_specs=[
-            pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
-            pl.BlockSpec((1, bd), lambda i, j: (0, j)),
-            pl.BlockSpec((1, bd), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bb, bd), lambda qi, i, j: (qi, i, j)),
+            pl.BlockSpec((1, bd), lambda qi, i, j: (qi, j)),
+            pl.BlockSpec((1, bd), lambda qi, i, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        out_specs=pl.BlockSpec((1, bb, 1), lambda qi, i, j: (qi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, bp, 1), jnp.float32),
         interpret=interpret,
     )(r, g, mask)
-    return out[:b, 0] + c_y
+    return out[:, :b, 0] + c_y[:, None]

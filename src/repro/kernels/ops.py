@@ -39,10 +39,18 @@ def _impl(override: str | None = None) -> str:
 def bregman_ub_filter(alpha, sqrt_gamma, qconst, sqrt_delta, impl=None):
     """Total UBs for one query + a closure for the Alg.-4 kth components.
 
-    Returns (totals (n,), comp_of(kth) -> (M,)).
+    Returns (totals (n,), comp_of(kth) -> (M,)).  Strictly single-query:
+    ``qconst``/``sqrt_delta`` must be (M,).  A (q, M) batch must go through
+    :func:`bregman_ub_matrix` — this used to fall back to the jnp reference
+    silently, hiding the Pallas kernel from batch callers.
     """
+    if qconst.ndim != 1 or sqrt_delta.ndim != 1:
+        raise ValueError(
+            "bregman_ub_filter is single-query: qconst/sqrt_delta must be "
+            f"(M,), got {qconst.shape}/{sqrt_delta.shape}; use "
+            "bregman_ub_matrix for query batches")
     mode = _impl(impl)
-    if mode == "ref" or qconst.ndim != 1:
+    if mode == "ref":
         totals = ref.bregman_ub_totals(alpha, sqrt_gamma, qconst, sqrt_delta)
     else:
         qsum = jnp.sum(qconst)[None]
@@ -75,6 +83,19 @@ def bregman_refine(rows, grad, c_y, family: str, impl=None):
         return ref.bregman_refine(rows, grad, c_y, family)
     return _dist.bregman_refine(rows, grad, c_y, family,
                                 interpret=(mode == "interpret"))
+
+
+def bregman_refine_batch(rows, grad, c_y, family: str, impl=None):
+    """Per-query exact distances.  (q,b,d),(q,d),(q,) -> (q,b)."""
+    if rows.ndim != 3 or grad.ndim != 2:
+        raise ValueError(
+            f"bregman_refine_batch wants (q,b,d)/(q,d), got "
+            f"{rows.shape}/{grad.shape}; use bregman_refine for one query")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_refine_batch(rows, grad, c_y, family)
+    return _dist.bregman_refine_batch(rows, grad, c_y, family,
+                                      interpret=(mode == "interpret"))
 
 
 def pccp_correlation(x, impl=None):

@@ -36,6 +36,15 @@ def bregman_refine(rows: Array, grad: Array, c_y: Array, family: str) -> Array:
     return fx - rows @ grad + c_y
 
 
+def bregman_refine_batch(rows: Array, grad: Array, c_y: Array,
+                         family: str) -> Array:
+    """Exact D_f per query's candidate rows.  (q,b,d),(q,d),(q,) -> (q,b)."""
+    fam = get_family(family)
+    fx = jnp.sum(fam.phi(rows), axis=-1)                  # (q, b)
+    cross = jnp.einsum("qbd,qd->qb", rows, grad)
+    return fx - cross + c_y[:, None]
+
+
 def pccp_correlation(x: Array) -> Array:
     """|Pearson| correlation matrix with zeroed diagonal.  (n,d) -> (d,d)."""
     xc = x - jnp.mean(x, axis=0, keepdims=True)

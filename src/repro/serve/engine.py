@@ -19,6 +19,13 @@ with per-bucket prefill programs, a launcher concern out of scope here.
 Slot isolation: batched prefill touches every slot's cache region, so the
 engine re-merges old cache values for non-admitted slots (one select per
 leaf) — active sequences are never perturbed (tested).
+
+Logits hooks: ``logits_hook(logits (B, V), hidden (B, D))`` is invoked
+with the FULL slot batch, never per slot — once per decode tick, plus once
+more on ticks that admit new requests (the prefill sampling path).  Hooks
+that do retrieval (serve/knnlm.py) ride the fused batched kNN pipeline
+(core/search.knn_search_batch): one filter matmul, one prune, one refine
+for all B slots per invocation.  See docs/batched_serving.md.
 """
 
 from __future__ import annotations

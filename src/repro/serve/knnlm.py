@@ -79,16 +79,47 @@ class KNNLMHook:
     lam: float = 0.25
     temperature: float = 1.0
     approx_p: float | None = None   # paper §8 approximate mode
+    budget: int | None = None       # pinned refine budget (stable jit cache)
     queries_served: int = 0
+    # next_tokens cached on device (lazy, internal)
+    _next_dev: Array | None = dataclasses.field(
+        default=None, init=False, repr=False)
 
     def __call__(self, logits: Array, hidden: Array | None) -> Array:
         if hidden is None:
             return logits
         h = jnp.asarray(hidden, jnp.float32)
+        # The engine hands the full (slots, D) hidden batch at every
+        # sampling step (each decode tick, plus once when admissions
+        # prefill), so each step is ONE fused knn_search_batch program: one
+        # filter matmul, one prune, one refine for all slots.  Pinning the
+        # budget keeps the jit cache to a single program per (slots, k);
+        # rare union overflows fall back to the capped sized retry.
         res = bp_search.knn_batch(self.store.index, h, self.k,
+                                  budget=self.budget,
                                   approx_p=self.approx_p)
         self.queries_served += int(h.shape[0])
-        knn_tokens = jnp.asarray(self.store.next_tokens)[res.ids]  # (B, k)
+        # Grow-only budget adaptation: only when this step's unions outgrew
+        # the effective budget (no pin is installed while the default
+        # suffices — one program, no mid-serving recompile).  On overflow
+        # the pin uses the shared fitted_budget sizing so it lands on the
+        # same static shapes knn_batch's retries compile.  The pin is
+        # bounded: one pathological row (a stale slot's hidden state, a
+        # degenerate union ~ n) must not permanently inflate every future
+        # step's refine gather to (B, n, d) — beyond the (power-of-two
+        # aligned) cap we accept the occasional retry instead.
+        default = bp_search.default_budget(self.store.index, self.k)
+        needed = int(jnp.max(res.num_candidates))
+        current = self.budget or default
+        if needed > current:
+            cap = bp_search.fitted_budget(self.store.index, self.k,
+                                          8 * default)
+            fitted = bp_search.fitted_budget(self.store.index, self.k,
+                                             needed)
+            self.budget = max(current, min(fitted, cap))  # never shrink
+        if self._next_dev is None:      # upload the value table once, not per tick
+            self._next_dev = jnp.asarray(self.store.next_tokens)
+        knn_tokens = self._next_dev[res.ids]                        # (B, k)
         w = jax.nn.softmax(-res.dists / self.temperature, axis=-1)  # (B, k)
         vocab = logits.shape[-1]
         p_knn = jax.vmap(
@@ -96,4 +127,9 @@ class KNNLMHook:
         )(knn_tokens, w)
         p_lm = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         mix = (1.0 - self.lam) * p_lm + self.lam * p_knn
+        # Defense in depth: knn_batch escalates to a full refine on cap
+        # exhaustion so inexact rows shouldn't occur, but if one ever does
+        # its neighbors are an arbitrary union prefix — serve the pure LM
+        # distribution for it instead of a biased mixture.
+        mix = jnp.where(res.exact[:, None], mix, p_lm)
         return jnp.log(jnp.maximum(mix, 1e-30))
