@@ -87,6 +87,57 @@ jax.tree_util.register_pytree_node(
 )
 
 
+# Point-major (n, ...) fields — the arrays a data-parallel shard slices.
+# Everything else (per-cluster corners, centers, beta samples) is small and
+# replicated on every shard.
+POINT_FIELDS = ("data", "point_ids", "alpha", "sqrt_gamma", "assign",
+                "alpha_min_pt", "sqrt_gamma_max_pt")
+REPLICATED_FIELDS = ("alpha_min", "sqrt_gamma_max", "counts", "centers",
+                     "beta_samples")
+
+# Corner sentinel for padded rows: an alpha_min_pt of +PAD_CORNER makes the
+# tuple-space lower bound exceed any finite search bound, so a padded row
+# can never enter a Theorem-3 candidate set; the same value in alpha keeps
+# it out of every filter top-k.
+PAD_CORNER = 1e30
+
+
+def pad_points(forest: BallForest, multiple: int) -> BallForest:
+    """Pad the point-major arrays so ``n % multiple == 0``.
+
+    Padded rows are search-inert: corner/filter stats are ``PAD_CORNER``
+    (never admitted, never in a top-k), ``point_ids`` are ``-1`` and the
+    data rows are ones (inside every family's domain, so padded rows are
+    numerically harmless even if a kernel touches them).
+    """
+    pad = (-forest.n) % multiple
+    if pad == 0:
+        return forest
+    fill = {"data": 1.0, "point_ids": -1, "alpha": PAD_CORNER,
+            "sqrt_gamma": 0.0, "assign": 0, "alpha_min_pt": PAD_CORNER,
+            "sqrt_gamma_max_pt": 0.0}
+
+    def pad_rows(a, v):
+        return jnp.concatenate(
+            [a, jnp.full((pad,) + a.shape[1:], v, a.dtype)], axis=0)
+
+    return dataclasses.replace(forest, **{
+        f: pad_rows(getattr(forest, f), fill[f]) for f in POINT_FIELDS})
+
+
+def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
+    """The ``[start, start+size)`` point-shard view of a forest.
+
+    This is the host-side mirror of what one device sees under the
+    ``shard_map`` in dist/knn.py: point-major arrays sliced, per-cluster /
+    sample arrays shared.
+    """
+    return dataclasses.replace(forest, **{
+        f: jax.lax.slice_in_dim(getattr(forest, f), start, start + size,
+                                axis=0)
+        for f in POINT_FIELDS})
+
+
 def default_num_clusters(n: int) -> int:
     return int(np.clip(n // 32, 8, 8192))
 

@@ -83,11 +83,22 @@ class SearchResult(NamedTuple):
     num_candidates: Array  # () int32 — Theorem-3 union size; (q,) batched
 
 
-def _query_struct(index: BallForest, y: Array) -> dict:
-    fam = index.family
-    q = q_transform(y, index.partition, fam)
-    q.update(bounds.query_refine_constants(y, fam))
+def query_struct(y: Array, partition, family) -> dict:
+    """Everything the pipeline needs about a query (or (q, d) block).
+
+    Per-subspace triples (Alg. 3) plus the refine constants — the query
+    representation of the single-query and batched paths.  The distributed
+    path (dist/knn.py) builds the same dict from its pre-gathered subspace
+    view via ``transform.q_transform_views`` + ``query_refine_constants``
+    instead of calling this (the gather is hoisted to the host there).
+    """
+    q = q_transform(y, partition, family)
+    q.update(bounds.query_refine_constants(y, family))
     return q
+
+
+def _query_struct(index: BallForest, y: Array) -> dict:
+    return query_struct(y, index.partition, index.family)
 
 
 def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
@@ -403,14 +414,21 @@ def default_budget(index: BallForest, k: int) -> int:
     return int(min(n, max(4 * k, 64, n // 16)))
 
 
-def fitted_budget(index: BallForest, k: int, needed: int) -> int:
-    """Smallest power-of-two budget (>= k, capped at n) covering ``needed``
-    candidates.  The ONE sizing rule for overflow handling: retries and
-    serving-side pinned budgets both use it, so they land on the same
-    static shapes and reuse each other's compiled programs.
+def fitted_budget_for_n(n: int, k: int, needed: int) -> int:
+    """Smallest power-of-two budget (>= k, capped at ``n``) covering
+    ``needed`` candidates.  The ONE sizing rule for overflow handling:
+    retries (single-host AND per-shard — dist/knn.py passes the shard
+    size as ``n``) and serving-side pinned budgets all use it, so they
+    land on the same static shapes and reuse each other's compiled
+    programs.
     """
     need = max(int(needed), k, 1)
-    return int(min(index.n, 1 << (need - 1).bit_length()))
+    return int(min(n, 1 << (need - 1).bit_length()))
+
+
+def fitted_budget(index: BallForest, k: int, needed: int) -> int:
+    """:func:`fitted_budget_for_n` against a whole index."""
+    return fitted_budget_for_n(index.n, k, needed)
 
 
 def knn(index: BallForest, y, k: int, budget: int | None = None,

@@ -123,6 +123,28 @@ def p_transform(x: Array, part: Partition, family: BregmanFamily) -> dict:
     return {"alpha": alpha, "gamma": gamma, "sqrt_gamma": jnp.sqrt(gamma)}
 
 
+def q_transform_views(ys: Array, mask: Array, family: BregmanFamily) -> dict:
+    """Alg. 3 on a PRE-GATHERED (..., M, w) subspace view.
+
+    The per-subspace triples depend on the query only through its subspace
+    view, so distributed callers (dist/knn.py) gather once on the host and
+    ship the view to every shard; this is the shared math.  Returns the
+    per-subspace fields of :func:`q_transform` (everything except the
+    original-order refinement constants).
+    """
+    g = family.phi_prime(ys)
+    alpha = -jnp.sum(family.phi(ys) * mask, axis=-1)
+    beta_yy = jnp.sum(ys * g * mask, axis=-1)
+    delta = jnp.sum(g * g * mask, axis=-1)
+    return {
+        "alpha": alpha,
+        "beta_yy": beta_yy,
+        "delta": delta,
+        "qconst": alpha + beta_yy,
+        "sqrt_delta": jnp.sqrt(delta),
+    }
+
+
 def q_transform(y: Array, part: Partition, family: BregmanFamily) -> dict:
     """Alg. 3 — transform query points into per-subspace triples.
 
@@ -135,18 +157,7 @@ def q_transform(y: Array, part: Partition, family: BregmanFamily) -> dict:
       grad: (..., d)       f'(y) in ORIGINAL dim order (for refinement)
       f_y: (...)           f(y) over all dims (for refinement constant)
     """
-    ys = part.gather(y)                       # (..., M, w)
-    mask = part.subspace_mask()
-    g = family.phi_prime(ys)
-    alpha = -jnp.sum(family.phi(ys) * mask, axis=-1)
-    beta_yy = jnp.sum(ys * g * mask, axis=-1)
-    delta = jnp.sum(g * g * mask, axis=-1)
-    return {
-        "alpha": alpha,
-        "beta_yy": beta_yy,
-        "delta": delta,
-        "qconst": alpha + beta_yy,
-        "sqrt_delta": jnp.sqrt(delta),
-        "grad": family.phi_prime(y),
-        "f_y": family.f(y),
-    }
+    q = q_transform_views(part.gather(y), part.subspace_mask(), family)
+    q["grad"] = family.phi_prime(y)
+    q["f_y"] = family.f(y)
+    return q

@@ -1,0 +1,80 @@
+"""Ring collective matmuls (latency-hiding all-gather / reduce-scatter).
+
+These are the shard_map-level building blocks for tensor-parallel layers:
+instead of materializing a full all-gather (or all-reduce) and THEN doing
+the matmul, the ring forms overlap one chunk's transfer with the previous
+chunk's matmul — on TPU the ICI transfer hides entirely behind the MXU.
+
+All functions are written to run INSIDE ``shard_map`` over one named mesh
+axis; operands are the per-device shards.
+
+* :func:`ag_matmul`      — x row-sharded over ``axis``, w replicated ->
+  full ``all_gather(x) @ w``, value-replicated on every device.
+* :func:`ag_matmul_reference` — same contract via a plain ``all_gather``
+  (the oracle the ring is checked against).
+* :func:`matmul_rs`      — x col-sharded / w row-sharded over ``axis``
+  (a contraction-split matmul) -> partial products reduce-scattered so
+  each device ends with its row block of the true product.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ag_matmul(x_local: Array, w: Array, axis: str) -> Array:
+    """Ring all-gather matmul: returns the FULL ``gather(x) @ w`` per device.
+
+    Each of the ``p`` steps multiplies the currently-held row chunk on the
+    MXU while (conceptually) the next chunk is in flight on the ring; the
+    output is value-replicated because every chunk visits every device.
+    """
+    p = jax.lax.psum(1, axis)
+    idx = jax.lax.axis_index(axis)
+    rows = x_local.shape[0]
+    out = jnp.zeros((p * rows, w.shape[1]),
+                    jnp.promote_types(x_local.dtype, w.dtype))
+    # receive from the next device: after i hops we hold chunk (idx + i)
+    perm = [(j, (j - 1) % p) for j in range(p)]
+    chunk = x_local
+    for i in range(p):
+        src = (idx + i) % p
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, chunk @ w, src * rows, axis=0)
+        if i < p - 1:
+            chunk = jax.lax.ppermute(chunk, axis, perm)
+    return out
+
+
+def ag_matmul_reference(x_local: Array, w: Array, axis: str) -> Array:
+    """Oracle for :func:`ag_matmul`: one bulk all-gather, then the matmul."""
+    return jax.lax.all_gather(x_local, axis, axis=0, tiled=True) @ w
+
+
+def matmul_rs(x_local: Array, w_local: Array, axis: str) -> Array:
+    """Ring reduce-scatter matmul for contraction-split operands.
+
+    ``x_local (m, k/p)`` and ``w_local (k/p, n)`` hold matching slices of
+    the contraction dim, so ``x_local @ w_local`` is a full-shape partial
+    product; the ring accumulates partials so device ``i`` ends with rows
+    ``[i*m/p, (i+1)*m/p)`` of the true ``x @ w`` (out spec ``P(axis, None)``).
+    """
+    p = jax.lax.psum(1, axis)
+    idx = jax.lax.axis_index(axis)
+    partial = x_local @ w_local                     # (m, n) partial sum
+    m = partial.shape[0]
+    if m % p:
+        raise ValueError(f"rows {m} not divisible by axis size {p}")
+    rows = m // p
+    take = lambda c: jax.lax.dynamic_slice_in_dim(
+        partial, (c % p) * rows, rows, axis=0)
+    perm = [(j, (j + 1) % p) for j in range(p)]
+    # start with the chunk that is farthest (p-1 hops) from its home device
+    acc = take(idx - 1)
+    for s in range(p - 1):
+        acc = jax.lax.ppermute(acc, axis, perm)
+        acc = acc + take(idx - 2 - s)
+    return acc

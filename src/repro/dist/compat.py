@@ -1,0 +1,93 @@
+"""Forward-compat aliases so the dist layer runs on old and new jax.
+
+The repo (and its tests) are written against the modern public API:
+``jax.shard_map(..., check_vma=...)``, ``jax.sharding.AxisType`` and
+``jax.make_mesh(..., axis_types=...)``.  The container's pinned jax
+predates all three; each has a 1:1 older spelling:
+
+* ``jax.shard_map``            -> ``jax.experimental.shard_map.shard_map``
+  (``check_vma`` was called ``check_rep``),
+* ``jax.sharding.AxisType``    -> absent; every mesh axis behaved as the
+  modern ``Auto`` type, so a placeholder enum is semantically exact,
+* ``jax.make_mesh(axis_types)``-> absent; dropping the kwarg is safe for
+  the same reason (this repo only ever passes ``Auto``).
+
+:func:`install` patches the missing names into the jax namespace ONCE,
+never overwriting an attribute that exists — on a modern jax it is a
+no-op.  It runs from ``repro/__init__`` so any ``repro.*`` import makes
+the modern spellings available before model/test code uses them.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+class AxisType(enum.Enum):
+    """Placeholder for jax.sharding.AxisType on old jax (all axes Auto)."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True,
+                      **kwargs):
+    from jax.experimental.shard_map import shard_map as _smap
+    kwargs.pop("axis_names", None)  # modern-only arg, default covers us
+    return _smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                 check_rep=check_vma, **kwargs)
+
+
+def install() -> None:
+    """Idempotently add modern jax spellings missing from an old install."""
+    if not hasattr(jax, "shard_map"):
+        _shard_map_compat._repro_compat = True
+        jax.shard_map = _shard_map_compat
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = AxisType
+
+    _install_cost_analysis_unwrap()
+
+    try:
+        has_axis_types = "axis_types" in inspect.signature(
+            jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover — exotic builds
+        has_axis_types = True
+    if not has_axis_types:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # pre-AxisType jax: every axis is Auto already
+            return orig(axis_shapes, axis_names, devices=devices)
+
+        make_mesh._repro_compat = True
+        jax.make_mesh = make_mesh
+
+
+def _install_cost_analysis_unwrap() -> None:
+    """Old jax returns ``[dict]`` from ``Compiled.cost_analysis``; modern
+    jax returns the dict itself.  Unwrap the 1-element list so callers
+    (launch/dryrun.py, tests) can index by metric name on either."""
+    compiled_cls = getattr(jax.stages, "Compiled", None)
+    orig = getattr(compiled_cls, "cost_analysis", None)
+    if compiled_cls is None or orig is None or getattr(
+            orig, "_repro_compat", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list) and len(out) == 1:
+            return out[0]
+        return out
+
+    cost_analysis._repro_compat = True
+    compiled_cls.cost_analysis = cost_analysis

@@ -1,0 +1,74 @@
+"""int8 gradient compression with error feedback (EF-SGD style).
+
+Data-parallel all-reduces move f32 gradients; compressing the wire format
+to int8 (code + one f32 scale per tensor per device) cuts DCN/ICI bytes
+4x.  Plain quantization biases the update, so every shard keeps a
+**residual**: the quantization error of step ``t`` is added back into the
+gradient of step ``t+1`` (error feedback), making the *accumulated*
+applied update track the true mean — the standard convergence argument
+for compressed SGD.
+
+All functions run INSIDE ``shard_map``; tensors are per-device shards and
+``axis`` is the data-parallel mesh axis.  The int8 code + scale pair is
+exactly what a wire implementation would ship; here the dequantized f32
+value enters the ``pmean`` (the arithmetic is identical to summing scaled
+int8 codes with per-device scales).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class EFState(NamedTuple):
+    """Per-shard error-feedback residuals, one leaf per gradient leaf."""
+
+    residual: Any
+
+
+def init_ef_state(grads: Any) -> EFState:
+    """Zero residuals shaped like one shard's gradient tree."""
+    return EFState(residual=jax.tree.map(jnp.zeros_like, grads))
+
+
+def _quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8: (code, scale) with x ~= code * scale."""
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    scale = jnp.maximum(scale, 1e-30)              # all-zero tensor guard
+    code = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return code, scale
+
+
+def compressed_psum_mean(g: Array, axis: str,
+                         residual: Array) -> tuple[Array, Array]:
+    """Mean of ``g`` over ``axis`` through an int8 wire, with error feedback.
+
+    Returns ``(mean_estimate, new_residual)``: the estimate is replicated
+    in value across ``axis`` (it is a pmean); the residual is this shard's
+    quantization error, to be fed back on the next call.
+    """
+    x = g + residual
+    code, scale = _quantize_int8(x)
+    deq = code.astype(jnp.float32) * scale
+    new_residual = x - deq
+    mean = jax.lax.pmean(deq, axis)
+    return mean, new_residual
+
+
+def compressed_grad_allreduce(grads: Any, axis: str,
+                              ef: EFState) -> tuple[Any, EFState]:
+    """Tree-level :func:`compressed_psum_mean` over a gradient pytree."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    means, residuals = [], []
+    for g, r in zip(flat_g, flat_r):
+        m, nr = compressed_psum_mean(g, axis, r)
+        means.append(m)
+        residuals.append(nr)
+    return (jax.tree.unflatten(treedef, means),
+            EFState(residual=jax.tree.unflatten(treedef, residuals)))

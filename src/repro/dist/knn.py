@@ -1,0 +1,230 @@
+"""Sharded BrePartition search: the fused pipeline as one SPMD program.
+
+The partition-filter-refinement framework decomposes over disjoint point
+blocks: subspace UB totals are per-point (one row of the filter matmul),
+the Theorem-3 corner test is per-point, and exact refinement distances are
+per-point.  So a ``BallForest`` split point-major across a ``data`` mesh
+axis runs the entire fused pipeline of ``core/search.py`` *locally* per
+shard, and only two tiny collectives touch the wire per query block:
+
+1. **Bound exchange** — each shard's local k smallest UB totals (plus the
+   corresponding P-tuples) are all-gathered (``p * k`` scalars + tuples
+   per query) and merged, so every shard prunes against the GLOBAL Alg.-4
+   bound ``qb``, not a loose local one.  Using a subset's k-th UB would
+   still be *correct* (it is an upper bound on the global k-th), but the
+   global bound keeps per-shard candidate unions small.
+2. **Top-k merge** — each shard refines its own candidates exactly and the
+   per-shard (q, k) results are merged with one k-way all-gather + top-k.
+
+Exactness survives sharding for the same reason (decomposability): each
+shard's local top-k is exact over its points whenever its union fits its
+budget, and the merge of exact local top-ks is the exact global top-k.
+``exact`` is the AND over shards; the host wrapper retries overflowing
+blocks with a grown budget exactly like ``knn_batch``, topping out at the
+per-shard point count (where the union always fits), so the flag is
+truthful without any brute-force escape hatch.
+
+The per-shard phases are the REUSED batched-pipeline helpers
+(``_batch_filter_topk`` / ``_candidate_mask_batch`` -> ``_corner_admit`` /
+``_compact_candidates`` / ``_refine_batch``) — one implementation of the
+math, two launch shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bounds
+from repro.core.bregman import get_family
+from repro.core.index import (BallForest, POINT_FIELDS, REPLICATED_FIELDS,
+                              pad_points)
+from repro.core.search import (DEFAULT_BLOCK_ROWS, MAX_BUDGET_DOUBLINGS,
+                               SearchResult, _batch_filter_topk,
+                               _candidate_mask_batch, _cdf_shrink,
+                               _compact_candidates, _refine_batch,
+                               fitted_budget_for_n)
+from repro.core.transform import Partition, q_transform_views
+from . import sharding as shd
+
+Array = jax.Array
+
+_QS_FIELDS = ("qconst", "sqrt_delta", "grad", "c_y")
+
+
+class QueryView(NamedTuple):
+    """A query block plus its pre-gathered per-subspace view.
+
+    The O(q*d) gather is query preprocessing — done once on the host by
+    :func:`query_subview` — while ``y`` (original dim order) feeds the
+    refine constants.  Both are replicated to every shard.
+    """
+
+    y: Array        # (q, d) original dim order
+    sub: Array      # (q, M, w) subspace view (partition.gather(y))
+
+
+def query_subview(partition: Partition, ys: Array) -> QueryView:
+    """Pre-gather a (q, d) query block's subspace view for the shards."""
+    ys = jnp.asarray(ys, jnp.float32)
+    if ys.ndim != 2:
+        raise ValueError(f"expected (q, d) queries, got {ys.shape}")
+    return QueryView(y=ys, sub=partition.gather(ys))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedForest:
+    """A BallForest laid out point-major across one mesh axis.
+
+    ``forest`` is the padded index with point-major arrays device_put over
+    ``mesh[axis]`` and the per-cluster/sample arrays replicated; ``global_n``
+    is the real (pre-padding) point count.
+    """
+
+    forest: BallForest
+    mesh: Mesh
+    axis: str
+    global_n: int
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def local_n(self) -> int:
+        return self.forest.n // self.num_shards
+
+
+def shard_index(forest: BallForest, mesh: Mesh,
+                axis: str = "data") -> ShardedForest:
+    """Split a BallForest point-major across ``mesh[axis]``.
+
+    Points are padded to a multiple of the axis size with search-inert
+    rows (core/index.pad_points), then every point-major array is
+    device_put with spec ``P(axis)`` and everything else replicated.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    padded = pad_points(forest, int(mesh.shape[axis]))
+    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
+    placed = dataclasses.replace(
+        padded,
+        **{f: put(getattr(padded, f), P(axis)) for f in POINT_FIELDS},
+        **{f: put(getattr(padded, f), P()) for f in REPLICATED_FIELDS})
+    return ShardedForest(forest=placed, mesh=mesh, axis=axis,
+                         global_n=forest.n)
+
+
+def _take_rows(a: Array, idx: Array) -> Array:
+    """(n, M) gathered at (q, k) row indices -> (q, k, M)."""
+    return jnp.take(a, idx, axis=0)
+
+
+@functools.lru_cache(maxsize=128)
+def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
+                      partition: Partition, num_clusters: int, k: int,
+                      budget: int, block_rows: int, approx: bool):
+    """One jitted SPMD program per (mesh x index-static x k/budget) cell."""
+    fam = get_family(family_name)
+
+    def per_shard(arrs: dict, qs: dict, p_guarantee):
+        # arrs carries exactly the dynamic BallForest fields; the statics
+        # come from the program cell, so this IS the local shard's index.
+        local = BallForest(family_name, partition, num_clusters, **arrs)
+        # ---- local filter + GLOBAL Alg.-4 bound via the k-way exchange ----
+        vals, idx = _batch_filter_topk(local, qs, k, block_rows)
+        a_k = _take_rows(local.alpha, idx)              # (q, k, M)
+        g_k = _take_rows(local.sqrt_gamma, idx)
+        vals_g = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
+        a_g = jax.lax.all_gather(a_k, axis, axis=1, tiled=True)
+        g_g = jax.lax.all_gather(g_k, axis, axis=1, tiled=True)
+        neg, sel = jax.lax.top_k(-vals_g, k)            # global k smallest
+        kth = sel[:, -1:, None]                         # (q, 1, 1)
+        m = a_g.shape[-1]
+        take_kth = lambda t: jnp.take_along_axis(
+            t, jnp.broadcast_to(kth, kth.shape[:1] + (1, m)), axis=1)[:, 0]
+        kth_tuple = {"alpha": take_kth(a_g), "sqrt_gamma": take_kth(g_g)}
+        qb = bounds.ub_components(kth_tuple, qs)        # (q, M)
+        if approx:                                      # §8 shrink, batched
+            sqrt_term = kth_tuple["sqrt_gamma"] * qs["sqrt_delta"]
+            kappa_i = qb - sqrt_term
+            c = _cdf_shrink(local.beta_samples, jnp.sum(sqrt_term, -1),
+                            jnp.sum(kappa_i, -1), p_guarantee)
+            qb = kappa_i + c[:, None] * sqrt_term
+
+        # ---- local prune + compact + refine (reused fused phases) ----
+        mask = _candidate_mask_batch(local, qs, qb, block_rows)
+        sel_c, valid, ncand = _compact_candidates(mask, budget)
+        ids, dists = _refine_batch(local, qs, sel_c, valid, k)
+
+        # ---- k-way merge + exactness/union-size reductions ----
+        ids_g = jax.lax.all_gather(ids, axis, axis=1, tiled=True)
+        d_g = jax.lax.all_gather(dists, axis, axis=1, tiled=True)
+        negd, pos = jax.lax.top_k(-d_g, k)
+        overflowed = jax.lax.psum((ncand > budget).astype(jnp.int32), axis)
+        return (jnp.take_along_axis(ids_g, pos, axis=1), -negd,
+                overflowed == 0, jax.lax.psum(ncand, axis),
+                jax.lax.pmax(ncand, axis))
+
+    arr_specs = {**{f: P(axis) for f in POINT_FIELDS},
+                 **{f: P() for f in REPLICATED_FIELDS}}
+    qs_specs = {f: P() for f in _QS_FIELDS}
+    in_specs = (arr_specs, qs_specs, P()) if approx else (arr_specs, qs_specs)
+    body = shd.shard_map(
+        per_shard if approx else (lambda arrs, qs: per_shard(arrs, qs, None)),
+        mesh=mesh, in_specs=in_specs, out_specs=P(), check=False)
+
+    def program(arrs, y, sub, *p_guarantee):
+        q = q_transform_views(sub, partition.subspace_mask(), fam)
+        q.update(bounds.query_refine_constants(y, fam))
+        qs = {f: q[f] for f in _QS_FIELDS}
+        return body(arrs, qs, *p_guarantee)
+
+    return jax.jit(program)
+
+
+def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
+                    budget: int, mesh: Mesh | None = None,
+                    approx_p: float | None = None,
+                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    max_doublings: int = MAX_BUDGET_DOUBLINGS) -> SearchResult:
+    """Batched kNN over a sharded index — the distributed ``knn_batch``.
+
+    ``queries`` is a (q, d) block or a prebuilt :class:`QueryView`;
+    ``budget`` is the PER-SHARD refine budget (clamped to the shard size).
+    Returns the usual ``(ids, dists, exact, num_candidates)`` with
+    ``num_candidates`` the global Theorem-3 union size per query.  On
+    overflow the whole block retries with a budget fitted to the largest
+    per-shard union (same power-of-two rule as the single-host wrapper);
+    the loop ends at ``budget == local_n`` where the union always fits, so
+    exact mode stays exact and ``exact`` is always truthful.
+    """
+    mesh = mesh or sharded.mesh
+    forest = sharded.forest
+    if family != forest.family_name:
+        raise ValueError(
+            f"family {family!r} does not match index {forest.family_name!r}")
+    if k > sharded.global_n:
+        raise ValueError(f"k={k} exceeds index size n={sharded.global_n}")
+    qv = (queries if isinstance(queries, QueryView)
+          else query_subview(forest.partition, queries))
+    local_n = sharded.local_n
+    b = max(min(int(budget), local_n), k)
+    arrs = {f: getattr(forest, f) for f in POINT_FIELDS + REPLICATED_FIELDS}
+    extra = () if approx_p is None else (jnp.float32(approx_p),)
+
+    for attempt in range(max_doublings + 1):
+        prog = _dist_knn_program(mesh, sharded.axis, forest.family_name,
+                                 forest.partition, forest.num_clusters, k, b,
+                                 block_rows, approx_p is not None)
+        ids, dists, exact, ncand, need = prog(arrs, qv.y, qv.sub, *extra)
+        if bool(jnp.all(exact)) or b >= local_n or attempt == max_doublings:
+            break
+        b = fitted_budget_for_n(local_n, k, int(jnp.max(need)))
+    return SearchResult(ids=ids, dists=dists, exact=exact,
+                        num_candidates=ncand)

@@ -1,0 +1,57 @@
+"""Pipeline parallelism: a GPipe-style microbatch schedule over a mesh axis.
+
+Stage ``s`` lives on mesh slice ``s`` of the ``axis``; microbatches flow
+down the ring with one ``ppermute`` per step.  With ``p`` stages and
+``n_micro`` microbatches the schedule runs ``n_micro + p - 1`` steps:
+stage 0 injects microbatch ``t`` at step ``t``, stage ``s`` processes it
+at step ``s + t``, and the last stage emits it at step ``p - 1 + t`` (the
+classic (p-1)-step fill/drain bubble).  Every device executes the same
+program each step — bubble slots compute on zeros and are discarded — so
+the whole schedule is one SPMD program with static shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .sharding import shard_map
+
+Array = jax.Array
+
+
+def pipeline_apply(stage_fn: Callable, mesh: Mesh, axis: str,
+                   stage_params: Array, microbatches: Array) -> Array:
+    """Apply ``p`` stacked stages to ``n_micro`` microbatches on a pipeline.
+
+    Args:
+      stage_fn: ``(w, x) -> y`` with ``y.shape == x.shape`` (stages chain).
+      stage_params: ``(p, ...)`` per-stage parameters, sharded over ``axis``.
+      microbatches: ``(n_micro, ...)`` inputs, replicated.
+    Returns the ``(n_micro, ...)`` outputs of the final stage, replicated.
+    """
+    p = mesh.shape[axis]
+    n_micro = microbatches.shape[0]
+
+    def run(ws_local, xs):
+        w = jax.tree.map(lambda a: a[0], ws_local)      # this device's stage
+        idx = jax.lax.axis_index(axis)
+        perm = [(j, (j + 1) % p) for j in range(p)]     # stage s -> s + 1
+        recv = jnp.zeros_like(xs[0])
+        ys = jnp.zeros_like(xs)
+        for t in range(n_micro + p - 1):
+            feed = xs[t] if t < n_micro else jnp.zeros_like(xs[0])
+            out = stage_fn(w, jnp.where(idx == 0, feed, recv))
+            done = t - (p - 1)                          # microbatch leaving
+            if done >= 0:
+                ys = ys.at[done].set(jnp.where(idx == p - 1, out, ys[done]))
+            recv = jax.lax.ppermute(out, axis, perm)
+        # only the last stage holds real outputs; psum replicates them
+        return jax.lax.psum(
+            jnp.where(idx == p - 1, ys, jnp.zeros_like(ys)), axis)
+
+    fn = shard_map(run, mesh=mesh, in_specs=(P(axis), P()), out_specs=P())
+    return jax.jit(fn)(stage_params, microbatches)

@@ -9,6 +9,16 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Register the `timeout` mark so the suite runs warning-free without
+    # pytest-timeout installed (the mark degrades to a no-op; with the
+    # plugin installed its own registration takes over enforcement).
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test time limit (no-op unless pytest-timeout "
+        "is installed)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -4,10 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import Mesh
 
-from repro.dist import sharding as shd
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.dist import sharding as shd  # noqa: E402
 
 
 def _mesh(shape, axes):
