@@ -73,9 +73,10 @@ def run(scale: float = 1.0):
         [sys.executable, "-c", _SCRIPT % {"src": src, "n": n}],
         env=env, capture_output=True, text=True, timeout=900)
     if proc.returncode != 0:
-        raise RuntimeError(f"dist bench subprocess failed:\n"
+        raise RuntimeError("dist bench subprocess failed:\n"
                            f"{proc.stderr[-2000:]}")
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
     records = json.loads(line[len("RESULT "):])
     base_us = records[0]["us"]
     return [Row("dist_knn", f"shards{r['shards']}", r["us"],

@@ -1,0 +1,84 @@
+"""Incremental-update cost: streaming insert vs full rebuild (segments).
+
+The serving claim behind core/segments.py: at a 10% append fraction,
+insert-then-search must beat rebuild-then-search by >= 10x, because an
+insert is one nearest-centroid pass over the new points while a rebuild
+re-runs per-subspace Bregman k-means over everything.  Also times delete
+(tombstoning) and both compaction modes so BENCH json tracks the whole
+segment lifecycle over time.
+
+All timings are steady-state: each variant is warmed once so jit
+compilation is excluded (every repeat re-applies the same-shape mutation
+to a fresh wrap of the same sealed forest and hits the compiled programs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bregman import get_family
+from repro.core.index import build_index
+from repro.core.segments import SegmentedForest
+from repro.core import search
+
+from .common import Row, timeit
+
+APPEND_FRACTION = 0.1
+
+
+def run(scale: float = 1.0):
+    n = max(512, int(8192 * scale))
+    a = max(8, int(n * APPEND_FRACTION))
+    d, m, k, q = 64, 8, 10, 16
+    family = "squared_euclidean"
+    fam = get_family(family)
+    data = np.asarray(fam.sample(jax.random.PRNGKey(0), (n + a, d),
+                                 scale=1.0))
+    ys = jnp.asarray(np.asarray(
+        fam.sample(jax.random.PRNGKey(1), (q, d), scale=1.0)))
+    base = build_index(data[:n], family, m=m, num_clusters=64, seed=0)
+    budget = search.default_budget(base, k)
+
+    def insert_search():
+        sf = SegmentedForest.from_forest(base)
+        sf.insert(data[n:], auto_compact=False)
+        return search.knn_batch(sf, ys, k, budget=budget)
+
+    def rebuild_search():
+        forest = build_index(data, family, m=m, num_clusters=64, seed=0)
+        return search.knn_batch(forest, ys, k, budget=budget)
+
+    def delete_search():
+        sf = SegmentedForest.from_forest(base)
+        sf.delete(np.arange(0, n, 97), auto_compact=False)
+        return search.knn_batch(sf, ys, k, budget=budget)
+
+    def compact(mode):
+        sf = SegmentedForest.from_forest(base)
+        sf.insert(data[n:], auto_compact=False)
+        sf.compact(mode)
+        return sf.main.data
+
+    us_insert = timeit(insert_search)
+    us_rebuild = timeit(rebuild_search)
+    us_delete = timeit(delete_search)
+    us_merge = timeit(lambda: compact("merge"))
+    us_rebuild_compact = timeit(lambda: compact("rebuild"))
+    speedup = us_rebuild / us_insert
+    return [
+        Row("incremental", "insert10_search", us_insert,
+            {"n": n, "appended": a, "speedup_vs_rebuild": round(speedup, 1)}),
+        Row("incremental", "rebuild_search", us_rebuild, {"n": n + a}),
+        Row("incremental", "delete_search", us_delete,
+            {"n": n, "deleted": len(range(0, n, 97))}),
+        Row("incremental", "compact_merge", us_merge, {"n": n + a}),
+        Row("incremental", "compact_rebuild", us_rebuild_compact,
+            {"n": n + a}),
+    ]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -45,7 +45,7 @@ def timeit(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
 
 
 def _is_jax(x) -> bool:
-    return any(isinstance(l, jax.Array) for l in jax.tree.leaves(x))
+    return any(isinstance(leaf, jax.Array) for leaf in jax.tree.leaves(x))
 
 
 def dataset(name: str, scale: float, seed: int = 0, cap: int | None = 4000):

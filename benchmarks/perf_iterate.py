@@ -84,7 +84,6 @@ def run(arch: str, shape: str, variant: str, multi_pod: bool = False):
     if rules_name == "noseq":
         from repro.dist import sharding as shd
         shd.NOSEQ_RULES = dict(shd.DEFAULT_RULES, seq=())
-        rules_name_for_cell = "noseq"
         # patch the lookup dict used by run_cell
         _orig = dryrun.run_cell
 
@@ -101,7 +100,6 @@ def run(arch: str, shape: str, variant: str, multi_pod: bool = False):
     else:
         cell_fn = dryrun.run_cell
 
-    import dataclasses as _dc
     cfg = apply_variant(arch, overrides) if overrides else None
     if cfg is not None:
         # route through run_cell's overrides path by monkeypatching configs

@@ -35,7 +35,7 @@ def main():
 
     # Approximate mode (paper §8): probability-guaranteed, tighter bounds.
     res_a = search.knn_batch(index, queries, 20, approx_p=0.8)
-    print(f"approx p=0.8: mean_candidates="
+    print("approx p=0.8: mean_candidates="
           f"{float(np.mean(res_a.num_candidates)):.0f}")
 
 

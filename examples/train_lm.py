@@ -6,7 +6,6 @@ straggler monitor, deterministic data pipeline.
 """
 
 import argparse
-import time
 
 import jax
 

@@ -22,7 +22,7 @@ import heapq
 
 import numpy as np
 
-from .bregman import BregmanFamily, get_family
+from .bregman import get_family
 
 F32 = 4  # bytes per float
 

@@ -19,7 +19,6 @@ distance evaluation, and never prunes a true Theorem-3 candidate.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ import numpy as np
 from .bregman import BregmanFamily, get_family
 from .transform import Partition, make_partition, p_transform
 from .partition import build_pccp_partition, fit_cost_model
-from .clustering import kmeans, cluster_stats, pairwise_bregman
+from .clustering import kmeans, cluster_stats
 
 Array = jax.Array
 
@@ -52,6 +51,7 @@ class BallForest:
     beta_samples: Array   # (S,) sorted empirical beta_xy sample (approx search)
     alpha_min_pt: Array       # (n, M)  own-cluster corner alpha_min per point
     sqrt_gamma_max_pt: Array  # (n, M)  own-cluster corner sqrt_gamma_max per point
+    gamma_edges: Array    # (M, nb-1) gamma-bucket quantile edges (for appends)
 
     @property
     def family(self) -> BregmanFamily:
@@ -73,7 +73,7 @@ class BallForest:
         dyn = (self.data, self.point_ids, self.alpha, self.sqrt_gamma,
                self.assign, self.alpha_min, self.sqrt_gamma_max, self.counts,
                self.centers, self.beta_samples, self.alpha_min_pt,
-               self.sqrt_gamma_max_pt)
+               self.sqrt_gamma_max_pt, self.gamma_edges)
         static = (self.family_name, self.partition, self.num_clusters)
         return dyn, static
 
@@ -93,7 +93,7 @@ jax.tree_util.register_pytree_node(
 POINT_FIELDS = ("data", "point_ids", "alpha", "sqrt_gamma", "assign",
                 "alpha_min_pt", "sqrt_gamma_max_pt")
 REPLICATED_FIELDS = ("alpha_min", "sqrt_gamma_max", "counts", "centers",
-                     "beta_samples")
+                     "beta_samples", "gamma_edges")
 
 # Corner sentinel for padded rows: an alpha_min_pt of +PAD_CORNER makes the
 # tuple-space lower bound exceed any finite search bound, so a padded row
@@ -101,28 +101,69 @@ REPLICATED_FIELDS = ("alpha_min", "sqrt_gamma_max", "counts", "centers",
 # it out of every filter top-k.
 PAD_CORNER = 1e30
 
+# The search-inert row: PAD_CORNER corners/filter stats (never admitted,
+# never in a top-k), point_ids -1, data rows of ones (inside every family's
+# domain, so inert rows are numerically harmless even if a kernel touches
+# them).  Shared by padding (pad_points) and tombstoning (tombstone_rows):
+# a deleted point IS a pad row that happens to sit mid-array.
+INERT_FILL = {"data": 1.0, "point_ids": -1, "alpha": PAD_CORNER,
+              "sqrt_gamma": 0.0, "assign": 0, "alpha_min_pt": PAD_CORNER,
+              "sqrt_gamma_max_pt": 0.0}
+
 
 def pad_points(forest: BallForest, multiple: int) -> BallForest:
-    """Pad the point-major arrays so ``n % multiple == 0``.
-
-    Padded rows are search-inert: corner/filter stats are ``PAD_CORNER``
-    (never admitted, never in a top-k), ``point_ids`` are ``-1`` and the
-    data rows are ones (inside every family's domain, so padded rows are
-    numerically harmless even if a kernel touches them).
-    """
+    """Pad the point-major arrays with inert rows so ``n % multiple == 0``."""
     pad = (-forest.n) % multiple
     if pad == 0:
         return forest
-    fill = {"data": 1.0, "point_ids": -1, "alpha": PAD_CORNER,
-            "sqrt_gamma": 0.0, "assign": 0, "alpha_min_pt": PAD_CORNER,
-            "sqrt_gamma_max_pt": 0.0}
 
     def pad_rows(a, v):
         return jnp.concatenate(
             [a, jnp.full((pad,) + a.shape[1:], v, a.dtype)], axis=0)
 
     return dataclasses.replace(forest, **{
-        f: pad_rows(getattr(forest, f), fill[f]) for f in POINT_FIELDS})
+        f: pad_rows(getattr(forest, f), INERT_FILL[f]) for f in POINT_FIELDS})
+
+
+def tombstone_rows(forest: BallForest, dead: Array) -> BallForest:
+    """Overwrite the rows where ``dead`` is True with the inert fill.
+
+    This is how the mutable index (core/segments.py) deletes: the row stays
+    physically present (static shapes, no recompile) but its filter stats
+    put it beyond any finite top-k and its corner stats fail every
+    Theorem-3 admission, so the filter, prune, and refine phases of all
+    three search paths skip it without knowing deletions exist.
+    """
+    dead = jnp.asarray(dead, bool)
+
+    def patch(a, v):
+        d = dead.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(d, jnp.asarray(v, a.dtype), a)
+
+    return dataclasses.replace(forest, **{
+        f: patch(getattr(forest, f), INERT_FILL[f]) for f in POINT_FIELDS})
+
+
+def concat_points(forests) -> BallForest:
+    """Concatenate point-major arrays of segments sharing one sealed layout.
+
+    All inputs must agree on the static fields and share the first
+    segment's replicated (per-cluster / sample) arrays — exactly the shape
+    of a SegmentedForest's main + append segments.  The result is a plain
+    searchable :class:`BallForest` view.
+    """
+    forests = list(forests)
+    head = forests[0]
+    for f in forests[1:]:
+        if (f.family_name != head.family_name
+                or f.partition != head.partition
+                or f.num_clusters != head.num_clusters):
+            raise ValueError("concat_points needs segments of one index")
+    if len(forests) == 1:
+        return head
+    return dataclasses.replace(head, **{
+        f: jnp.concatenate([getattr(seg, f) for seg in forests], axis=0)
+        for f in POINT_FIELDS})
 
 
 def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
@@ -212,13 +253,15 @@ def build_index(
     # gamma-bucketed corners: effective segment id = ball * nb + bucket,
     # bucket = global per-subspace gamma quantile of the member
     nb = max(int(gamma_buckets), 1)
-    assign_eff = []
+    assign_eff, edges = [], []
     for i in range(m):
         qs = jnp.quantile(sqrt_gamma[:, i],
                           jnp.linspace(0.0, 1.0, nb + 1)[1:-1])
         bucket = jnp.searchsorted(qs, sqrt_gamma[:, i]).astype(jnp.int32)
         assign_eff.append(assign_l[:, i] * nb + bucket)
+        edges.append(qs)
     assign_eff = jnp.stack(assign_eff, axis=1)      # (n, M) in [0, C*nb)
+    gamma_edges = jnp.stack(edges)                  # (M, nb-1) bucket edges
     c_eff = c * nb
 
     amin = jnp.stack([
@@ -270,4 +313,5 @@ def build_index(
         beta_samples=beta_samples,
         alpha_min_pt=amin_pt,
         sqrt_gamma_max_pt=gmax_pt,
+        gamma_edges=gamma_edges,
     )

@@ -44,6 +44,13 @@ class CostModel:
         cand = self.candidates(m)
         return self.d + m * self.n + self.n * logk + cand * (self.d + logk)
 
+    def build_cost(self, m: int, kmeans_iters: int = 12) -> float:
+        """Offline rebuild cost (paper Alg. 5 dominant term): per-subspace
+        Bregman k-means is ``iters`` (n, w) x (w, C) matmuls per subspace,
+        i.e. ~ iters * n * d * C flops-per-dim with C ~ n/32."""
+        c = float(np.clip(self.n // 32, 8, 8192))
+        return kmeans_iters * self.n * (self.d / max(m, 1)) * c * m
+
     def m_star(self, k: int = 1) -> int:
         """Theorem 4: M* = log_alpha( 2n / (-mu ln(alpha) (d + log k)) ).
 
@@ -120,6 +127,42 @@ def fit_cost_model(
         lam.append(np.mean(dist <= ub) / max(ub, 1e-9))
     beta = float(np.clip(np.mean(lam), 1e-8, 1e3))
     return CostModel(a=a, alpha=alpha, beta=beta, n=n, d=d)
+
+
+# ---------------------------------------------------------------------------
+# Merge-vs-rebuild decision for the mutable index (core/segments.py)
+# ---------------------------------------------------------------------------
+
+# Queries a compaction is amortized over before its cost "counts" — the
+# serving-side knob: streams that compact rarely can afford a rebuild,
+# chatty streams should merge.
+COMPACT_AMORTIZE_QUERIES = 2048
+
+
+def decide_compaction(
+    model: CostModel,
+    m: int,
+    *,
+    stale_fraction: float,
+    amortize_queries: int = COMPACT_AMORTIZE_QUERIES,
+    k: int = 1,
+) -> str:
+    """``"merge"`` or ``"rebuild"`` for a segmented forest (Theorem-4 model).
+
+    A merge keeps the sealed segment's partition, centroids and gamma
+    buckets; appended points were assigned against stale centroids and
+    tombstones leave corner stats conservatively wide, so the merged
+    index's expected candidate set — the ``beta * A * alpha^M * n`` term of
+    the online cost — is inflated by roughly the stale fraction (appended +
+    deleted over live).  A rebuild restores the fitted candidate estimate
+    but pays :meth:`CostModel.build_cost` once, amortized over
+    ``amortize_queries``.  Pick whichever per-query cost is lower.
+    """
+    base = model.online_cost(m, k)
+    cost_merge = base + stale_fraction * model.candidates(m) * (
+        model.d + np.log(max(k, 2)))
+    cost_rebuild = base + model.build_cost(m) / max(amortize_queries, 1)
+    return "rebuild" if cost_rebuild < cost_merge else "merge"
 
 
 # ---------------------------------------------------------------------------

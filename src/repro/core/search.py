@@ -47,6 +47,11 @@ rows (kernels/bregman_dist.bregman_refine_batch) with per-query grad/c_y
 tiles.  The §8 approximate mode's CDF shrink is vectorized over the batch.
 :func:`knn_batch` is the host wrapper: an iterative, capped
 budget-doubling loop shared by the whole batch.
+
+Every public entry point also accepts the mutable
+:class:`~repro.core.segments.SegmentedForest`: it is snapshotted to its
+one-BallForest view (``_as_forest``), whose tombstoned rows are
+search-inert in the filter, prune, and refine phases by construction.
 """
 
 from __future__ import annotations
@@ -101,6 +106,22 @@ def _query_struct(index: BallForest, y: Array) -> dict:
     return query_struct(y, index.partition, index.family)
 
 
+def _as_forest(index, k: int | None = None) -> BallForest:
+    """Accept a BallForest or the mutable SegmentedForest (core/segments.py).
+
+    A mutable index exposes ``view()`` — the cached one-BallForest snapshot
+    over its sealed main + append segments — and ``live_n``; ``k`` is
+    validated against the LIVE count when present, because tombstoned rows
+    are physically in the snapshot but can never be returned (``index.n``
+    alone would over-promise).
+    """
+    live_n = getattr(index, "live_n", None)
+    if k is not None and live_n is not None and k > live_n:
+        raise ValueError(f"k={k} exceeds live point count {live_n}")
+    view = getattr(index, "view", None)
+    return view() if callable(view) else index
+
+
 def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
                   sqrt_delta: Array, qb: Array, sub_axis: int) -> Array:
     """THE Theorem-3 membership test, shared by every search path.
@@ -134,7 +155,8 @@ def _refine(index: BallForest, q: dict, sel: Array, valid: Array, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
-def knn_search(index: BallForest, y: Array, k: int, budget: int) -> SearchResult:
+def _knn_search_jit(index: BallForest, y: Array, k: int,
+                    budget: int) -> SearchResult:
     """Exact kNN for one query (jit core, static budget)."""
     from repro.kernels import ops as kernel_ops
     q = _query_struct(index, y)
@@ -143,9 +165,8 @@ def knn_search(index: BallForest, y: Array, k: int, budget: int) -> SearchResult
     totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
         index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"]
     )
-    neg_vals, idx = jax.lax.top_k(-totals, k)
+    _, idx = jax.lax.top_k(-totals, k)
     kth = idx[-1]
-    tau = -neg_vals[-1]
     qb = comp_kth_fn(kth)                              # (M,) Alg. 4 bounds
 
     # ---- ball pruning + union (Theorem 3) ----
@@ -163,8 +184,13 @@ def knn_search(index: BallForest, y: Array, k: int, budget: int) -> SearchResult
                         num_candidates=num_candidates)
 
 
+def knn_search(index, y: Array, k: int, budget: int) -> SearchResult:
+    """Exact kNN for one query (static budget; accepts a mutable index)."""
+    return _knn_search_jit(_as_forest(index, k), y, k, budget)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
-def knn_search_approx(
+def _knn_search_approx_jit(
     index: BallForest, y: Array, k: int, budget: int, p_guarantee: Array
 ) -> SearchResult:
     """Approximate kNN with probability guarantee p (paper §8, Prop. 1).
@@ -201,6 +227,13 @@ def knn_search_approx(
     ids, dists = _refine(index, q, sel, valid, k)
     return SearchResult(ids=ids, dists=dists, exact=num_candidates <= budget,
                         num_candidates=num_candidates)
+
+
+def knn_search_approx(index, y: Array, k: int, budget: int,
+                      p_guarantee: Array) -> SearchResult:
+    """§8 approximate kNN for one query (accepts a mutable index)."""
+    return _knn_search_approx_jit(_as_forest(index, k), y, k, budget,
+                                  p_guarantee)
 
 
 def _cdf_shrink(samples: Array, mu: Array, kappa: Array, p: Array) -> Array:
@@ -385,20 +418,34 @@ def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
-def knn_search_batch(index: BallForest, ys: Array, k: int, budget: int,
-                     block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
-    """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
+def _knn_search_batch_jit(index: BallForest, ys: Array, k: int, budget: int,
+                          block_rows: int) -> SearchResult:
     return _knn_search_batch_core(index, ys, k, budget, None, block_rows)
 
 
+def knn_search_batch(index, ys: Array, k: int, budget: int,
+                     block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
+    """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
+    return _knn_search_batch_jit(_as_forest(index, k), ys, k, budget,
+                                 block_rows)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
-def knn_search_batch_approx(
+def _knn_search_batch_approx_jit(
     index: BallForest, ys: Array, k: int, budget: int, p_guarantee: Array,
+    block_rows: int,
+) -> SearchResult:
+    return _knn_search_batch_core(index, ys, k, budget, p_guarantee,
+                                  block_rows)
+
+
+def knn_search_batch_approx(
+    index, ys: Array, k: int, budget: int, p_guarantee: Array,
     block_rows: int = DEFAULT_BLOCK_ROWS,
 ) -> SearchResult:
     """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q."""
-    return _knn_search_batch_core(index, ys, k, budget, p_guarantee,
-                                  block_rows)
+    return _knn_search_batch_approx_jit(_as_forest(index, k), ys, k, budget,
+                                        p_guarantee, block_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -438,8 +485,12 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
     Always exact when ``approx_p is None``; with ``approx_p`` the result has
     the paper's probability guarantee instead.
     """
+    index = _as_forest(index, k)
     y = jnp.asarray(y, jnp.float32)
-    budget = budget or default_budget(index, k)
+    # Clamp explicit budgets: a pinned budget can outlive a compaction that
+    # shrank the index (serve/knnlm.py), and top_k(priority, budget) needs
+    # budget <= n.
+    budget = min(budget, index.n) if budget else default_budget(index, k)
     while True:
         if approx_p is None:
             res = knn_search(index, y, k, budget)
@@ -467,10 +518,12 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     per-query dataset gather), preserving the invariant that exact-mode
     results are exact and approx-mode results carry the §8 guarantee.
     """
+    index = _as_forest(index, k)
     ys = jnp.asarray(ys, jnp.float32)
     if ys.ndim != 2:
         raise ValueError(f"knn_batch wants (q, d) queries, got {ys.shape}")
-    budget = budget or default_budget(index, k)
+    # Same clamp as knn: pinned budgets survive compactions that shrink n.
+    budget = min(budget, index.n) if budget else default_budget(index, k)
     p = None if approx_p is None else jnp.float32(approx_p)
 
     def run(b):
@@ -495,11 +548,26 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     # (q, n, d) copy of the dataset; the fused brute-force distance needs
     # no per-query row gather.  num_candidates (budget-independent) comes
     # from the last capped run.
-    ids_layout, dists = brute_force_knn(index.data, ys, k, index.family)
-    return SearchResult(ids=jnp.take(index.point_ids, ids_layout),
-                        dists=dists,
+    ids, dists = _brute_force_live(index, ys, k)
+    return SearchResult(ids=ids, dists=dists,
                         exact=jnp.ones(ys.shape[0], bool),
                         num_candidates=res.num_candidates)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _brute_force_live(index: BallForest, ys: Array, k: int):
+    """Linear scan over the LIVE rows of an index — the escalation oracle.
+
+    Unlike :func:`brute_force_knn` over ``index.data``, this masks
+    tombstoned/padded rows (``point_ids < 0``, whose data is the inert
+    ones-fill at a finite distance) so a mutated index never surfaces a
+    deleted id even on the budget-cap escape hatch.
+    """
+    fam = index.family
+    dist = jax.vmap(lambda y: fam.distance(index.data, y[None, :]))(ys)
+    dist = jnp.where((index.point_ids >= 0)[None, :], dist, POS_BIG)
+    neg, idx = jax.lax.top_k(-dist, k)                  # (q, k)
+    return jnp.take(index.point_ids, idx), -neg
 
 
 def brute_force_knn(data, y, k: int, family) -> tuple[Array, Array]:

@@ -1,0 +1,355 @@
+"""Mutable segmented BallForest: streaming insert/delete without rebuild.
+
+The paper's partition-filter-refinement index (§5-§7) is built once
+offline; serving workloads (streaming ingestion into the kNN-LM datastore,
+per-user corpora) need to add and retire points without the full
+O(n * d * M) rebuild.  The classic LSM answer, adapted to the BB-forest:
+
+* **Sealed main segment** — a :class:`~repro.core.index.BallForest` built
+  by ``build_index`` exactly as today.  Its partition, Bregman-k-means
+  centroids, gamma-bucket edges and beta samples are FROZEN: they define
+  the coordinate system every later mutation reuses.
+* **Append segments** — each :meth:`SegmentedForest.insert` call seals its
+  points into a small BallForest that shares the main segment's statics
+  and replicated tables.  New points do NOT re-run PCCP or the Theorem-4
+  cost model: they are P-transformed with the sealed partition
+  (``transform.p_transform_views``), assigned to the nearest EXISTING
+  centroid per subspace, gamma-bucketed with the sealed quantile edges,
+  and given *singleton* per-point corners (``alpha_min_pt = alpha``,
+  ``sqrt_gamma_max_pt = sqrt_gamma``).  A singleton corner is the point's
+  own Cauchy lower bound, so the Theorem-3 admission test stays exact for
+  appended points (it is in fact tighter than a shared cluster corner).
+* **Tombstones** — :meth:`SegmentedForest.delete` overwrites a point's row
+  with the search-inert fill (``index.tombstone_rows``): filter stats
+  beyond any finite top-k, corner stats that fail every admission, id -1.
+  The filter, Theorem-3 prune, and refine phases of all three search
+  paths (``knn_search``, ``knn_search_batch``, ``dist.distributed_knn``)
+  skip deleted rows without knowing deletions exist.
+* **Compaction** — :meth:`SegmentedForest.compact` re-seals everything
+  into one main segment, either by a cheap **merge** (drop dead rows,
+  re-sort the shared layout, recompute corner tables with
+  ``clustering.cluster_stats`` — no k-means) or a full **rebuild**
+  (``build_index`` over the live points, original ids preserved).  The
+  choice is driven by the fitted Theorem-4 :class:`CostModel`
+  (``partition.decide_compaction``); inserts auto-compact when the stale
+  fraction crosses :attr:`SegmentedForest.compact_threshold`.
+
+Searches never look at this class's bookkeeping: :meth:`view` snapshots
+the segments into ONE plain BallForest (``index.concat_points``) and every
+entry point in ``core/search.py`` / ``dist/knn.py`` accepts either type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bregman import BregmanFamily
+from .clustering import cluster_stats, pairwise_bregman
+from .index import (
+    BallForest,
+    POINT_FIELDS,
+    build_index,
+    concat_points,
+    tombstone_rows,
+)
+from .partition import CostModel, decide_compaction, fit_cost_model
+from .transform import p_transform_views
+
+Array = jax.Array
+
+# Stale fraction (appended + deleted over live) above which insert/delete
+# auto-compact.  0.5 ~ "append segments cost as much as the main scan".
+DEFAULT_COMPACT_THRESHOLD = 0.5
+
+
+def _append_segment(main: BallForest, points: Array,
+                    first_id: int) -> BallForest:
+    """Seal ``points`` into a searchable append segment of ``main``'s index.
+
+    Reuses the sealed partition / transforms / centroids / bucket edges;
+    recomputes only the per-point P-tuples, the nearest-centroid
+    assignment, and the (singleton) per-point corner stats.
+    """
+    part, fam = main.partition, main.family
+    pts = jnp.asarray(points, jnp.float32)
+    if pts.ndim != 2 or pts.shape[1] != main.d:
+        raise ValueError(f"expected (a, {main.d}) points, got {pts.shape}")
+    sub = part.gather(pts)                          # (a, M, w)
+    mask = part.subspace_mask()
+    p = p_transform_views(sub, mask, fam)
+    alpha, sqrt_gamma = p["alpha"], p["sqrt_gamma"]
+
+    # Nearest existing centroid per subspace, then the sealed gamma-bucket
+    # edges, reproduce build_index's effective segment id for new points.
+    num_centers = main.centers.shape[1]
+    nb = main.num_clusters // num_centers
+    assign_eff = []
+    for i in range(part.num_subspaces):
+        dist = pairwise_bregman(sub[:, i, :], main.centers[i], mask[i], fam)
+        ball = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+        bucket = jnp.searchsorted(
+            main.gamma_edges[i], sqrt_gamma[:, i]).astype(jnp.int32)
+        assign_eff.append(ball * nb + bucket)
+    assign_eff = jnp.stack(assign_eff, axis=1)      # (a, M)
+
+    ids = jnp.arange(first_id, first_id + pts.shape[0], dtype=jnp.int32)
+    # Singleton corners: the point's own lower-bound tuple.  Conservative
+    # (lb = LB_i(x, y) <= D_i(x, y)) and tighter than any shared corner, so
+    # appended points need no update to the sealed cluster tables.
+    return dataclasses.replace(
+        main, data=pts, point_ids=ids, alpha=alpha, sqrt_gamma=sqrt_gamma,
+        assign=assign_eff, alpha_min_pt=alpha, sqrt_gamma_max_pt=sqrt_gamma)
+
+
+@dataclasses.dataclass
+class SegmentedForest:
+    """A mutable BrePartition index: sealed main + append segments.
+
+    Host-side bookkeeping (live masks, id lookup) lives in numpy; all
+    searchable state lives in the segments' device arrays, so
+    :meth:`view` is a concat — no host->device transfer per query.
+    """
+
+    main: BallForest
+    segments: list[BallForest]
+    live: list[np.ndarray]          # bool mask per block (0 = main)
+    ids_host: list[np.ndarray]      # point_ids per block (-1 = dead/pad)
+    next_id: int
+    cost_model: CostModel | None = None
+    compact_threshold: float = DEFAULT_COMPACT_THRESHOLD
+    _view: BallForest | None = dataclasses.field(
+        default=None, init=False, repr=False)
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_forest(cls, forest: BallForest, *,
+                    cost_model: CostModel | None = None,
+                    compact_threshold: float = DEFAULT_COMPACT_THRESHOLD,
+                    ) -> "SegmentedForest":
+        ids = np.asarray(forest.point_ids)
+        return cls(main=forest, segments=[], live=[ids >= 0],
+                   ids_host=[ids.copy()],
+                   next_id=int(ids.max(initial=-1)) + 1,
+                   cost_model=cost_model,
+                   compact_threshold=compact_threshold)
+
+    # -- snapshot & stats ---------------------------------------------------
+
+    def view(self) -> BallForest:
+        """One searchable BallForest over every segment (cached)."""
+        if self._view is None:
+            self._view = concat_points([self.main] + self.segments)
+        return self._view
+
+    @property
+    def family(self) -> BregmanFamily:
+        return self.main.family
+
+    @property
+    def family_name(self) -> str:
+        return self.main.family_name
+
+    @property
+    def partition(self):
+        return self.main.partition
+
+    @property
+    def num_clusters(self) -> int:
+        return self.main.num_clusters
+
+    @property
+    def n(self) -> int:
+        """Physical rows (tombstones included) — the searched array length."""
+        return self.main.n + sum(s.n for s in self.segments)
+
+    @property
+    def d(self) -> int:
+        return self.main.d
+
+    @property
+    def m(self) -> int:
+        return self.main.m
+
+    @property
+    def live_n(self) -> int:
+        return int(sum(int(mask.sum()) for mask in self.live))
+
+    @property
+    def appended_live(self) -> int:
+        return int(sum(int(mask.sum()) for mask in self.live[1:]))
+
+    @property
+    def deleted_n(self) -> int:
+        return self.n - self.live_n
+
+    @property
+    def append_fraction(self) -> float:
+        return self.appended_live / max(self.live_n, 1)
+
+    @property
+    def stale_fraction(self) -> float:
+        """Appended + deleted over live — the compaction pressure metric."""
+        return (self.appended_live + self.deleted_n) / max(self.live_n, 1)
+
+    def live_ids(self) -> np.ndarray:
+        """Original ids of the live points, in layout order."""
+        return np.concatenate(
+            [ids[mask] for ids, mask in zip(self.ids_host, self.live)])
+
+    # -- mutations ----------------------------------------------------------
+
+    def insert(self, points, *, auto_compact: bool = True) -> np.ndarray:
+        """Append ``points`` as a new searchable segment; returns their ids.
+
+        O(a * d * C) — one nearest-centroid pass against the sealed
+        centroids — versus O(n * d * C * iters) for a rebuild.  Note the
+        snapshot's row count changes, so the next search compiles a new
+        program; batch inserts (and the auto-compact threshold) keep that
+        churn bounded.
+        """
+        seg = _append_segment(self.main, points, self.next_id)
+        self.segments.append(seg)
+        self.live.append(np.ones(seg.n, dtype=bool))
+        self.ids_host.append(np.asarray(seg.point_ids).copy())
+        self.next_id += seg.n
+        self._view = None
+        out = np.asarray(seg.point_ids)
+        if auto_compact and self.stale_fraction > self.compact_threshold:
+            self.compact()
+        return out
+
+    def delete(self, ids, *, auto_compact: bool = True) -> int:
+        """Tombstone the given original ids; returns how many were live.
+
+        Unknown or already-deleted ids are ignored.  Rows stay physically
+        present (static shapes — no recompile) but become search-inert in
+        every phase of every path; compaction reclaims them.
+        """
+        ids = np.unique(np.asarray(ids, np.int64))
+        removed = 0
+        blocks = [self.main] + self.segments
+        for b, block in enumerate(blocks):
+            dead = np.isin(self.ids_host[b], ids) & self.live[b]
+            if not dead.any():
+                continue
+            removed += int(dead.sum())
+            self.live[b] = self.live[b] & ~dead
+            self.ids_host[b][dead] = -1
+            patched = tombstone_rows(block, jnp.asarray(dead))
+            if b == 0:
+                self.main = patched
+            else:
+                self.segments[b - 1] = patched
+        if removed:
+            self._view = None
+            if auto_compact and self.stale_fraction > self.compact_threshold:
+                self.compact()
+        return removed
+
+    # -- compaction ---------------------------------------------------------
+
+    def fitted_cost_model(self) -> CostModel:
+        """The Theorem-4 model for merge-vs-rebuild (fit lazily, cached)."""
+        if self.cost_model is None:
+            (data,) = self._live_arrays(("data",))
+            self.cost_model = fit_cost_model(data, self.family)
+        return self.cost_model
+
+    def decide(self) -> str:
+        """``"merge"`` or ``"rebuild"`` per the CostModel rule."""
+        return decide_compaction(self.fitted_cost_model(), self.m,
+                                 stale_fraction=self.stale_fraction)
+
+    def compact(self, mode: str | None = None, *, seed: int = 0) -> str:
+        """Re-seal every segment (and reclaim tombstones) into the main.
+
+        ``mode`` forces ``"merge"`` or ``"rebuild"``; ``None`` asks
+        :meth:`decide`.  Either way original ids are preserved, so stored
+        side tables (e.g. the kNN-LM token values) stay valid.
+        """
+        if self.live_n == 0:
+            # Nothing to model or re-cluster: an empty merge just drops the
+            # dead rows (a rebuild would hand build_index a 0-row array).
+            mode = "merge"
+        elif mode is None:
+            mode = self.decide()
+        if mode not in ("merge", "rebuild"):
+            raise ValueError(f"unknown compaction mode {mode!r}")
+        if mode == "rebuild":
+            self.main = self._rebuild(seed)
+        else:
+            self.main = self._merge()
+        self.segments = []
+        ids = np.asarray(self.main.point_ids)
+        self.live = [ids >= 0]
+        self.ids_host = [ids.copy()]
+        self._view = None
+        # The model was fit on a previous cycle's live set; n/alpha/beta
+        # drift with every grow/evict, so refit per compaction cycle.
+        self.cost_model = None
+        return mode
+
+    def _live_arrays(self, fields=POINT_FIELDS) -> tuple[np.ndarray, ...]:
+        """Host copies of the live rows of the given point-major fields."""
+        blocks = [self.main] + self.segments
+        out = []
+        for f in fields:
+            out.append(np.concatenate([
+                np.asarray(getattr(b, f))[mask]
+                for b, mask in zip(blocks, self.live)]))
+        return tuple(out)
+
+    def _rebuild(self, seed: int) -> BallForest:
+        """Full Alg.-5 rebuild over the live points, original ids kept."""
+        data, ids = self._live_arrays(("data", "point_ids"))
+        num_centers = self.main.centers.shape[1]
+        nb = max(self.main.num_clusters // num_centers, 1)
+        forest = build_index(
+            data, self.family_name, m=self.m,
+            num_clusters=min(num_centers, data.shape[0]),
+            gamma_buckets=nb, seed=seed)
+        # build_index ids index into `data`; route them through the
+        # original-id map so external references survive the rebuild.
+        return dataclasses.replace(
+            forest,
+            point_ids=jnp.asarray(ids)[forest.point_ids])
+
+    def _merge(self) -> BallForest:
+        """Cheap re-seal: keep the sealed centroids/buckets, drop dead rows,
+        restore the shared layout, recompute the corner tables exactly."""
+        (data, ids, alpha, sqrt_gamma, assign,
+         _amin_pt, _gmax_pt) = self._live_arrays()
+        order = np.argsort(assign[:, 0], kind="stable")
+        data, ids = jnp.asarray(data[order]), jnp.asarray(ids[order])
+        alpha = jnp.asarray(alpha[order])
+        sqrt_gamma = jnp.asarray(sqrt_gamma[order])
+        assign = jnp.asarray(assign[order])
+
+        c_eff, m = self.num_clusters, self.m
+        stats_a = [cluster_stats(alpha[:, i], assign[:, i], c_eff)
+                   for i in range(m)]
+        stats_g = [cluster_stats(sqrt_gamma[:, i], assign[:, i], c_eff)
+                   for i in range(m)]
+        amin = jnp.stack([s["min"] for s in stats_a])
+        gmax = jnp.stack([s["max"] for s in stats_g])
+        counts = jnp.stack([s["count"] for s in stats_a])
+        take_pt = jax.vmap(lambda a, s: a[s], in_axes=(0, 1), out_axes=1)
+        return dataclasses.replace(
+            self.main, data=data, point_ids=ids, alpha=alpha,
+            sqrt_gamma=sqrt_gamma, assign=assign, alpha_min=amin,
+            sqrt_gamma_max=gmax, counts=counts,
+            alpha_min_pt=take_pt(amin, assign),
+            sqrt_gamma_max_pt=take_pt(gmax, assign))
+
+
+def build_segmented_index(data, family, **build_kwargs) -> SegmentedForest:
+    """``build_index`` wrapped as the mutable index (Alg. 5 + segments)."""
+    threshold = build_kwargs.pop("compact_threshold",
+                                 DEFAULT_COMPACT_THRESHOLD)
+    forest = build_index(data, family, **build_kwargs)
+    return SegmentedForest.from_forest(forest, compact_threshold=threshold)

@@ -106,6 +106,20 @@ def make_partition(d: int, m: int, order: np.ndarray | None = None) -> Partition
 # Transforms
 # ---------------------------------------------------------------------------
 
+def p_transform_views(xs: Array, mask: Array, family: BregmanFamily) -> dict:
+    """Alg. 2 on a PRE-GATHERED (..., M, w) subspace view.
+
+    The P-tuple depends on a point only through its subspace view, so
+    callers that already hold the view — the streaming-insert path
+    (core/segments.py) transforms new points with the SEALED partition's
+    gathered view — share this math with :func:`p_transform`, mirroring
+    the :func:`q_transform_views` split on the query side.
+    """
+    alpha = jnp.sum(family.phi(xs) * mask, axis=-1)
+    gamma = jnp.sum(xs * xs * mask, axis=-1)
+    return {"alpha": alpha, "gamma": gamma, "sqrt_gamma": jnp.sqrt(gamma)}
+
+
 def p_transform(x: Array, part: Partition, family: BregmanFamily) -> dict:
     """Alg. 2 — transform data points into per-subspace tuples.
 
@@ -116,11 +130,7 @@ def p_transform(x: Array, part: Partition, family: BregmanFamily) -> dict:
       gamma: (..., M)   sum of squares over the subspace dims
       sqrt_gamma: (..., M)  precomputed sqrt for the MXU filter form
     """
-    xs = part.gather(x)                       # (..., M, w)
-    mask = part.subspace_mask()
-    alpha = jnp.sum(family.phi(xs) * mask, axis=-1)
-    gamma = jnp.sum(xs * xs * mask, axis=-1)
-    return {"alpha": alpha, "gamma": gamma, "sqrt_gamma": jnp.sqrt(gamma)}
+    return p_transform_views(part.gather(x), part.subspace_mask(), family)
 
 
 def q_transform_views(ys: Array, mask: Array, family: BregmanFamily) -> dict:

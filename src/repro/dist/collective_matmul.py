@@ -69,8 +69,11 @@ def matmul_rs(x_local: Array, w_local: Array, axis: str) -> Array:
     if m % p:
         raise ValueError(f"rows {m} not divisible by axis size {p}")
     rows = m // p
-    take = lambda c: jax.lax.dynamic_slice_in_dim(
-        partial, (c % p) * rows, rows, axis=0)
+
+    def take(c):
+        return jax.lax.dynamic_slice_in_dim(
+            partial, (c % p) * rows, rows, axis=0)
+
     perm = [(j, (j + 1) % p) for j in range(p)]
     # start with the chunk that is farthest (p-1 hops) from its home device
     acc = take(idx - 1)

@@ -83,13 +83,16 @@ class ShardedForest:
 
     ``forest`` is the padded index with point-major arrays device_put over
     ``mesh[axis]`` and the per-cluster/sample arrays replicated; ``global_n``
-    is the real (pre-padding) point count.
+    is the real (pre-padding) point count and ``live_n`` the count of
+    non-tombstoned points (== ``global_n`` unless the shard came from a
+    mutable SegmentedForest with deletions).
     """
 
     forest: BallForest
     mesh: Mesh
     axis: str
     global_n: int
+    live_n: int | None = None
 
     @property
     def num_shards(self) -> int:
@@ -99,25 +102,42 @@ class ShardedForest:
     def local_n(self) -> int:
         return self.forest.n // self.num_shards
 
+    @property
+    def global_live_n(self) -> int:
+        return self.global_n if self.live_n is None else self.live_n
 
-def shard_index(forest: BallForest, mesh: Mesh,
-                axis: str = "data") -> ShardedForest:
-    """Split a BallForest point-major across ``mesh[axis]``.
 
+def shard_index(forest, mesh: Mesh, axis: str = "data") -> ShardedForest:
+    """Split an index point-major across ``mesh[axis]``.
+
+    ``forest`` is a BallForest or a mutable SegmentedForest
+    (core/segments.py) — the latter is snapshotted to its one-BallForest
+    view, so each shard's slice carries its share of the append segments
+    and tombstones and the per-shard fused pipeline needs no new code.
     Points are padded to a multiple of the axis size with search-inert
     rows (core/index.pad_points), then every point-major array is
     device_put with spec ``P(axis)`` and everything else replicated.
+
+    A mutating index does NOT auto-reshard: re-call after insert/delete
+    (the snapshot is immutable, exactly like a filesystem LSM level).
     """
     if axis not in mesh.axis_names:
         raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    live_n = getattr(forest, "live_n", None)
+    view = getattr(forest, "view", None)
+    if callable(view):
+        forest = view()
     padded = pad_points(forest, int(mesh.shape[axis]))
-    put = lambda a, spec: jax.device_put(a, NamedSharding(mesh, spec))
+
+    def put(a, spec):
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
     placed = dataclasses.replace(
         padded,
         **{f: put(getattr(padded, f), P(axis)) for f in POINT_FIELDS},
         **{f: put(getattr(padded, f), P()) for f in REPLICATED_FIELDS})
     return ShardedForest(forest=placed, mesh=mesh, axis=axis,
-                         global_n=forest.n)
+                         global_n=forest.n, live_n=live_n)
 
 
 def _take_rows(a: Array, idx: Array) -> Array:
@@ -146,8 +166,10 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
         neg, sel = jax.lax.top_k(-vals_g, k)            # global k smallest
         kth = sel[:, -1:, None]                         # (q, 1, 1)
         m = a_g.shape[-1]
-        take_kth = lambda t: jnp.take_along_axis(
-            t, jnp.broadcast_to(kth, kth.shape[:1] + (1, m)), axis=1)[:, 0]
+
+        def take_kth(t):
+            return jnp.take_along_axis(
+                t, jnp.broadcast_to(kth, kth.shape[:1] + (1, m)), axis=1)[:, 0]
         kth_tuple = {"alpha": take_kth(a_g), "sqrt_gamma": take_kth(g_g)}
         qb = bounds.ub_components(kth_tuple, qs)        # (q, M)
         if approx:                                      # §8 shrink, batched
@@ -209,8 +231,9 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     if family != forest.family_name:
         raise ValueError(
             f"family {family!r} does not match index {forest.family_name!r}")
-    if k > sharded.global_n:
-        raise ValueError(f"k={k} exceeds index size n={sharded.global_n}")
+    if k > sharded.global_live_n:
+        raise ValueError(
+            f"k={k} exceeds live index size n={sharded.global_live_n}")
     qv = (queries if isinstance(queries, QueryView)
           else query_subview(forest.partition, queries))
     local_n = sharded.local_n

@@ -11,7 +11,6 @@ Set env ``REPRO_KERNEL_IMPL`` to 'pallas' | 'interpret' | 'ref' to override.
 from __future__ import annotations
 
 import os
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -89,7 +88,7 @@ def bregman_refine_batch(rows, grad, c_y, family: str, impl=None):
     """Per-query exact distances.  (q,b,d),(q,d),(q,) -> (q,b)."""
     if rows.ndim != 3 or grad.ndim != 2:
         raise ValueError(
-            f"bregman_refine_batch wants (q,b,d)/(q,d), got "
+            "bregman_refine_batch wants (q,b,d)/(q,d), got "
             f"{rows.shape}/{grad.shape}; use bregman_refine for one query")
     mode = _impl(impl)
     if mode == "ref":

@@ -32,7 +32,7 @@ import traceback
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              overrides: dict | None = None, rules_name: str | None = None,
              microbatches: int = 1) -> dict:
-    import jax
+    import jax  # noqa: F401 — forces jax init AFTER the env lock above
     from repro import configs
     from repro.dist import sharding as shd
     from repro.launch import hlo_analysis as ha

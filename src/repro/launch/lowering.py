@@ -15,8 +15,6 @@ training params are f32 and shard fsdp x model.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

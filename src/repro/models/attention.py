@@ -138,11 +138,11 @@ def sdpa_dense(q: Array, k: Array, v: Array, *, causal: bool = True,
 # SDPA — chunked flash (long sequences; python-unrolled, remat'd body)
 # ---------------------------------------------------------------------------
 
-def _flash_chunk(qg, kj, vj, acc, m, l, qpos, kpos, causal, window, scale):
+def _flash_chunk(qg, kj, vj, acc, m, den, qpos, kpos, causal, window, scale):
     """Online-softmax update for one (q_chunk, kv_chunk) tile.
 
     qg (B,Cq,KH,G,D); kj/vj (B,Ck,KH,D); acc (B,Cq,KH,G,D) f32;
-    m/l (B,Cq,KH,G) f32; qpos (Cq,), kpos (Ck,) absolute positions.
+    m/den (B,Cq,KH,G) f32; qpos (Cq,), kpos (Ck,) absolute positions.
     """
     s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kj,
                    preferred_element_type=jnp.float32) * scale
@@ -155,11 +155,11 @@ def _flash_chunk(qg, kj, vj, acc, m, l, qpos, kpos, causal, window, scale):
     m_new = jnp.maximum(m, jnp.max(s, axis=-1))
     p = jnp.exp(s - m_new[..., None])
     corr = jnp.exp(m - m_new)
-    l_new = l * corr + jnp.sum(p, axis=-1)
+    den_new = den * corr + jnp.sum(p, axis=-1)
     acc_new = acc * corr[..., None] + jnp.einsum(
         "bqhgk,bkhd->bqhgd", p.astype(qg.dtype), vj,
         preferred_element_type=jnp.float32)
-    return acc_new, m_new, l_new
+    return acc_new, m_new, den_new
 
 
 def sdpa_chunked(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -192,7 +192,7 @@ def sdpa_chunked(q: Array, k: Array, v: Array, *, causal: bool = True,
         qpos = jnp.arange(q0, q1) + q_offset
         acc = jnp.zeros((b, cq, kh, h // kh, d), jnp.float32)
         m = jnp.full((b, cq, kh, h // kh), NEG_INF, jnp.float32)
-        l = jnp.zeros((b, cq, kh, h // kh), jnp.float32)
+        den = jnp.zeros((b, cq, kh, h // kh), jnp.float32)
         for j in range(nk):
             k0, k1 = j * kv_chunk, min((j + 1) * kv_chunk, skv)
             # trace-time tile skipping (static positions)
@@ -201,9 +201,9 @@ def sdpa_chunked(q: Array, k: Array, v: Array, *, causal: bool = True,
                 continue
             if window is not None and (k1 - 1) < lo_q - window + 1:
                 continue
-            acc, m, l = chunk_fn(qi, k[:, k0:k1], v[:, k0:k1], acc, m, l,
-                                 qpos, jnp.arange(k0, k1))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+            acc, m, den = chunk_fn(qi, k[:, k0:k1], v[:, k0:k1], acc, m,
+                                   den, qpos, jnp.arange(k0, k1))
+        out = acc / jnp.maximum(den, 1e-30)[..., None]
         outs.append(out.reshape(b, cq, h, d).astype(q.dtype))
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 

@@ -65,20 +65,23 @@ def _attn_spec(cfg: EncDecConfig) -> dict:
 
 
 def param_specs(cfg: EncDecConfig) -> dict:
-    enc_layer = lambda: {
-        "norm1": norm_spec(cfg.d_model, cfg.norm),
-        "attn": _attn_spec(cfg),
-        "norm2": norm_spec(cfg.d_model, cfg.norm),
-        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
-    }
-    dec_layer = lambda: {
-        "norm1": norm_spec(cfg.d_model, cfg.norm),
-        "self_attn": _attn_spec(cfg),
-        "norm_x": norm_spec(cfg.d_model, cfg.norm),
-        "cross_attn": _attn_spec(cfg),
-        "norm2": norm_spec(cfg.d_model, cfg.norm),
-        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
-    }
+    def enc_layer():
+        return {
+            "norm1": norm_spec(cfg.d_model, cfg.norm),
+            "attn": _attn_spec(cfg),
+            "norm2": norm_spec(cfg.d_model, cfg.norm),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
+        }
+
+    def dec_layer():
+        return {
+            "norm1": norm_spec(cfg.d_model, cfg.norm),
+            "self_attn": _attn_spec(cfg),
+            "norm_x": norm_spec(cfg.d_model, cfg.norm),
+            "cross_attn": _attn_spec(cfg),
+            "norm2": norm_spec(cfg.d_model, cfg.norm),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff, gated=False, bias=True),
+        }
     return {
         "embed": embed_spec(cfg.vocab_size, cfg.d_model),
         "dec_pos": Spec((cfg.max_position, cfg.d_model), (None, "fsdp"),

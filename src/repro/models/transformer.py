@@ -381,8 +381,11 @@ def cache_axes(cfg: LMConfig):
     kinds = cfg.layer_kinds()
     if _scan_serving(cfg):
         one = _one_layer_cache_axes(cfg, kinds[0])
-        is_axes = lambda x: isinstance(x, tuple) and all(
-            isinstance(a, (str, type(None))) for a in x)
+
+        def is_axes(x):
+            return isinstance(x, tuple) and all(
+                isinstance(a, (str, type(None))) for a in x)
+
         return jax.tree.map(lambda ax: ("layers",) + ax, one,
                             is_leaf=is_axes)
     return [_one_layer_cache_axes(cfg, k) for k in kinds]

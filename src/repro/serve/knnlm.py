@@ -17,7 +17,10 @@ queries; the distributed path (dist/knn.py) shards the datastore over
 
 ``build_datastore`` runs teacher-forced prefills over a corpus and records
 (hidden, next_token) pairs; ``KNNLMHook`` plugs into serve/engine.py's
-``logits_hook``.
+``logits_hook``.  ``Datastore.grow``/``Datastore.evict`` mutate the store
+online via the segmented index (core/segments.py) — streaming ingestion
+and retirement with no rebuild and no serving pause (see
+docs/index_updates.md for the contract).
 """
 
 from __future__ import annotations
@@ -30,15 +33,69 @@ import numpy as np
 
 from repro.core import search as bp_search
 from repro.core.index import BallForest, build_index
+from repro.core.segments import SegmentedForest
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class Datastore:
-    index: BallForest
-    next_tokens: np.ndarray     # (n,) int32 — token following each key
+    """kNN-LM key/value store over a BrePartition index.
+
+    ``index`` is a BallForest, or — after the first :meth:`grow`/
+    :meth:`evict` — the mutable SegmentedForest.  ``next_tokens`` is
+    indexed by ORIGINAL point id; ids are never reused (tombstones keep
+    theirs, compaction preserves them), so the table is append-only and
+    stays valid across every mutation.
+    """
+
+    index: BallForest | SegmentedForest
+    next_tokens: np.ndarray     # (next_id,) int32 — token following each key
     hidden_dim: int
+    version: int = 0            # bumped on every mutation (cache invalidation)
+    # Threshold-triggered compaction runs a CostModel fit (and possibly a
+    # full rebuild) synchronously inside grow()/evict(); serving
+    # deployments that cannot absorb that pause on the request path set
+    # False and call index.compact() from a maintenance tick instead.
+    auto_compact: bool = True
+
+    def _mutable(self) -> SegmentedForest:
+        if not isinstance(self.index, SegmentedForest):
+            self.index = SegmentedForest.from_forest(self.index)
+        return self.index
+
+    def grow(self, keys: np.ndarray, next_tokens: np.ndarray) -> np.ndarray:
+        """Online ingestion: append (hidden, next-token) pairs; returns ids.
+
+        One nearest-centroid pass against the sealed index — no rebuild on
+        the insert itself.  The new keys are retrievable by the very next
+        hook call (the snapshot row count changes, so that call compiles a
+        fresh program; batch your grows).  With :attr:`auto_compact` the
+        call that crosses the stale-fraction threshold additionally pays
+        for the compaction inline.
+        """
+        keys = np.asarray(keys, np.float32)
+        toks = np.asarray(next_tokens, np.int32)
+        if keys.ndim != 2 or keys.shape[1] != self.hidden_dim:
+            raise ValueError(
+                f"expected (a, {self.hidden_dim}) keys, got {keys.shape}")
+        if toks.shape != (keys.shape[0],):
+            raise ValueError("one next-token per key required")
+        store = self._mutable()
+        if store.next_id != self.next_tokens.shape[0]:
+            raise ValueError("datastore ids out of sync with value table")
+        ids = store.insert(keys, auto_compact=self.auto_compact)
+        self.next_tokens = np.concatenate([self.next_tokens, toks])
+        self.version += 1
+        return ids
+
+    def evict(self, ids) -> int:
+        """Retire keys (stale users, rolled-over corpora) by tombstone."""
+        removed = self._mutable().delete(ids,
+                                         auto_compact=self.auto_compact)
+        if removed:
+            self.version += 1
+        return removed
 
 
 def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
@@ -81,12 +138,20 @@ class KNNLMHook:
     approx_p: float | None = None   # paper §8 approximate mode
     budget: int | None = None       # pinned refine budget (stable jit cache)
     queries_served: int = 0
-    # next_tokens cached on device (lazy, internal)
+    # next_tokens cached on device (lazy, refreshed when the store mutates)
     _next_dev: Array | None = dataclasses.field(
         default=None, init=False, repr=False)
+    _next_version: int = dataclasses.field(
+        default=-1, init=False, repr=False)
 
     def __call__(self, logits: Array, hidden: Array | None) -> Array:
         if hidden is None:
+            return logits
+        # Eviction can shrink the store below k mid-serving; retrieval is
+        # then impossible, so degrade to the pure LM distribution (the same
+        # fallback the inexact-row gate uses) instead of raising.
+        live = getattr(self.store.index, "live_n", self.store.index.n)
+        if live < self.k:
             return logits
         h = jnp.asarray(hidden, jnp.float32)
         # The engine hands the full (slots, D) hidden batch at every
@@ -117,8 +182,12 @@ class KNNLMHook:
             fitted = bp_search.fitted_budget(self.store.index, self.k,
                                              needed)
             self.budget = max(current, min(fitted, cap))  # never shrink
-        if self._next_dev is None:      # upload the value table once, not per tick
+        # Upload the value table once per store version, not per tick; a
+        # grow/evict bumps store.version and forces a re-upload so appended
+        # ids resolve and evicted ids (which never surface) age out.
+        if self._next_dev is None or self._next_version != self.store.version:
             self._next_dev = jnp.asarray(self.store.next_tokens)
+            self._next_version = self.store.version
         knn_tokens = self._next_dev[res.ids]                        # (B, k)
         w = jax.nn.softmax(-res.dists / self.temperature, axis=-1)  # (B, k)
         vocab = logits.shape[-1]

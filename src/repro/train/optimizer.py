@@ -37,7 +37,9 @@ class AdamWState(NamedTuple):
 
 
 def init_state(params) -> AdamWState:
-    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    def zeros(t):
+        return jax.tree.map(jnp.zeros_like, t)
+
     return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
                       nu=zeros(params))
 

@@ -14,7 +14,6 @@ params/moments update in place (halves peak optimizer memory).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -125,11 +124,11 @@ def make_train_step(bundle, mesh: Mesh, cfg: TrainConfig, shape: ShapeSpec,
             loss = 0.0
             metrics = None
             for i in range(n_micro):
-                l, m, g = one_micro(_split_micro(batch, n_micro, i))
+                li, m, g = one_micro(_split_micro(batch, n_micro, i))
                 g32 = jax.tree.map(lambda x: x.astype(jnp.float32), g)
                 acc = g32 if acc is None else jax.tree.map(
                     jnp.add, acc, g32)
-                loss = loss + l / n_micro
+                loss = loss + li / n_micro
                 metrics = m if metrics is None else jax.tree.map(
                     jnp.add, metrics, m)
             grads = jax.tree.map(lambda x: x / n_micro, acc)
@@ -163,8 +162,11 @@ def lower_train_step(bundle, mesh: Mesh, cfg: TrainConfig, shape: ShapeSpec,
 
 def _state_structs(bundle) -> TrainState:
     p = bundle.param_structs()
-    f32 = lambda t: jax.tree.map(
-        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+
+    def f32(t):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+
     return TrainState(
         params=p,
         opt=AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),

@@ -119,7 +119,6 @@ def check_compression():
     print(f"  compression ok (one-shot err {err0:.4f}, EF drift {drift:.4f})")
 
     # tree API smoke
-    grads = {"a": g, "b": g * 2}
     ef = init_ef_state({"a": g[0], "b": g[0] * 2})
     def tree_body(gl, ef_res):
         means, new_ef = compressed_grad_allreduce(

@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.configs.common import batch_structs, ShapeSpec
 from repro.models.registry import build_model
 
 ARCHS = list(configs.ARCH_IDS)

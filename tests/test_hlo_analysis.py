@@ -10,7 +10,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as ha

@@ -57,7 +57,8 @@ def test_reduced_cells_lower_compile_and_analyze():
     out = subprocess.run([sys.executable, "-c", _SCRIPT % src], env=env,
                          capture_output=True, text=True, timeout=570)
     assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][0]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
     res = json.loads(line[len("RESULT "):])
     assert len(res) == 5
     for cell, costs in res.items():

@@ -2,7 +2,6 @@
 elastic restart, straggler monitor, data-pipeline determinism."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ from repro.train import checkpoint as ckpt
 from repro.train import losses
 from repro.train.optimizer import OptimizerConfig, init_state, apply_updates, schedule
 from repro.train.straggler import StragglerConfig, StragglerMonitor
-from repro.train.train_loop import (TrainConfig, TrainState, init_train_state,
+from repro.train.train_loop import (TrainConfig, init_train_state,
                                     make_train_step, state_shardings)
 
 SMALL_SHAPE = ShapeSpec("smoke", seq_len=32, global_batch=4, kind="train")
