@@ -1,0 +1,86 @@
+"""Int8 storage tier vs fp32: filter-phase bytes moved + end-to-end QPS.
+
+The quantized BallForest's headline win is HBM traffic: the batched filter
+and prune phases stream the four (n, M) stat tables for EVERY query block,
+and the int8 tier streams them as 1-byte codes plus eight fp32 decode
+scalars per row.  The ``*_filter_bytes`` derived fields are the exact
+per-query-block byte counts implied by the stored dtypes (the analytic
+traffic model the TPU roofline uses); the QPS rows are measured wall-clock
+on whatever backend runs the bench (on CPU the int8 path pays a decode
+convert it would not pay on the TPU MXU path, so read the traffic ratio as
+the hardware-independent signal and the QPS pair as the end-to-end sanity
+check).
+
+Capacity is reported alongside: bytes per stored point across the
+point-major tables (the "millions of users" number).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import search
+from repro.core.bregman import get_family
+from repro.core.index import build_index
+
+from .common import Row, timeit
+
+F32 = 4
+
+
+def _filter_bytes(index) -> int:
+    """Bytes the filter+prune phases stream per query block (whole index)."""
+    n, m = index.alpha.shape
+    stat_tables = 4                       # alpha, sqrt_gamma, amin_pt, gmax_pt
+    if index.storage == "int8":
+        return n * (stat_tables * m * 1 + 8 * F32)
+    return n * stat_tables * m * F32
+
+
+def _point_bytes(index) -> float:
+    """Stored bytes per point across the point-major tables (capacity)."""
+    n = index.n
+    total = 0
+    from repro.core.index import point_fields
+    for f in point_fields(index):
+        a = getattr(index, f)
+        total += a.size * a.dtype.itemsize
+    return total / n
+
+
+def run(scale: float = 1.0):
+    n = max(1024, int(16384 * scale))
+    d, m, k, q = 128, 32, 10, 64
+    fam = get_family("squared_euclidean")
+    data = np.asarray(fam.sample(jax.random.PRNGKey(0), (n, d), scale=1.0))
+    ys = np.asarray(fam.sample(jax.random.PRNGKey(1), (q, d), scale=1.0))
+
+    rows = []
+    indexes = {}
+    for name, quant in (("f32", False), ("int8", True)):
+        index = build_index(data, "squared_euclidean", m=m, num_clusters=64,
+                            quantize=quant, seed=0)
+        indexes[name] = index
+        budget = search.default_budget(index, k)
+        us = timeit(lambda: search.knn_search_batch(index, ys, k, budget),
+                    repeats=5)
+        rows.append(Row("quantized", f"search_{name}_q{q}", us, {
+            "n": n, "d": d, "m": m,
+            "qps": round(q / (us / 1e6), 1),
+            "filter_bytes": _filter_bytes(index),
+            "point_bytes": round(_point_bytes(index), 1),
+        }))
+
+    ratio = _filter_bytes(indexes["f32"]) / _filter_bytes(indexes["int8"])
+    cap_ratio = _point_bytes(indexes["f32"]) / _point_bytes(indexes["int8"])
+    rows.append(Row("quantized", "traffic_ratio", 0.0, {
+        "filter_traffic_x": round(ratio, 2),        # acceptance: >= 3x
+        "capacity_x": round(cap_ratio, 2),
+    }))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

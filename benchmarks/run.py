@@ -29,6 +29,7 @@ MODULES = [
     "bench_datasize",        # Fig. 14
     "bench_approx",          # Fig. 15
     "bench_batch_search",    # fused batch pipeline vs vmapped per-query
+    "bench_quantized",       # int8 tier: filter bytes moved + QPS vs fp32
     "bench_incremental",     # segmented insert/delete/compact vs rebuild
     "bench_dist_knn",        # shard-count scaling (8 forced host devices)
     "bench_kernels",         # kernel micro-benches

@@ -28,21 +28,38 @@ from .bregman import BregmanFamily, get_family
 from .transform import Partition, make_partition, p_transform
 from .partition import build_pccp_partition, fit_cost_model
 from .clustering import kmeans, cluster_stats
+from . import quantize as qz
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class BallForest:
-    """Immutable search index. All arrays live on device (or sharded)."""
+    """Immutable search index. All arrays live on device (or sharded).
+
+    Two storage tiers share this one dataclass (``storage`` is static):
+
+    * ``"f32"`` — the original layout: every point-major table fp32.
+    * ``"int8"`` — ``data``/``alpha``/``sqrt_gamma``/``alpha_min_pt``/
+      ``sqrt_gamma_max_pt`` hold int8 CODES and the ``*_scale``/``*_zp``
+      companions hold the per-row affine decode (core/quantize.py).  The
+      index's point set is the DEQUANTIZED rows (:meth:`rows_view`); the
+      search pipeline stays exact over that set because filter bounds are
+      inflated by the stat rounding error and corner stats are
+      directed-rounded (conservative) at build time.
+
+    Never read ``data``/``alpha``/... raw in new code — go through
+    :meth:`rows_view` / the dequant helpers in core/search.py, which are
+    the single place the storage variants branch.
+    """
 
     family_name: str
     partition: Partition
     num_clusters: int
-    data: Array           # (n, d)  points in shared layout order
+    data: Array           # (n, d)  points in shared layout order (codes in int8)
     point_ids: Array      # (n,)    original ids (layout -> original)
-    alpha: Array          # (n, M)  P-tuple alpha
-    sqrt_gamma: Array     # (n, M)  P-tuple sqrt(gamma)
+    alpha: Array          # (n, M)  P-tuple alpha (codes in int8)
+    sqrt_gamma: Array     # (n, M)  P-tuple sqrt(gamma) (codes in int8)
     assign: Array         # (n, M)  cluster id of each point per subspace
     alpha_min: Array      # (M, C)  per-cluster min alpha
     sqrt_gamma_max: Array # (M, C)  per-cluster max sqrt(gamma)
@@ -52,6 +69,17 @@ class BallForest:
     alpha_min_pt: Array       # (n, M)  own-cluster corner alpha_min per point
     sqrt_gamma_max_pt: Array  # (n, M)  own-cluster corner sqrt_gamma_max per point
     gamma_edges: Array    # (M, nb-1) gamma-bucket quantile edges (for appends)
+    storage: str = "f32"      # "f32" | "int8" — static (jit cache key)
+    data_scale: Array | None = None   # (n,) data row affine scale (int8 tier)
+    data_zp: Array | None = None      # (n,) data row affine zero-point
+    alpha_scale: Array | None = None  # (n,) filter-stat decode, round-nearest
+    alpha_zp: Array | None = None
+    sg_scale: Array | None = None
+    sg_zp: Array | None = None
+    amin_scale: Array | None = None   # (n,) corner decode, floor-rounded
+    amin_zp: Array | None = None
+    gmax_scale: Array | None = None   # (n,) corner decode, ceil-rounded
+    gmax_zp: Array | None = None
 
     @property
     def family(self) -> BregmanFamily:
@@ -69,17 +97,39 @@ class BallForest:
     def m(self) -> int:
         return self.partition.num_subspaces
 
+    def rows_view(self) -> Array:
+        """(n, d) fp32 point rows — THE point set this index searches.
+
+        In the int8 tier this dequantizes the whole table; use it for
+        oracles, cost-model fits, and rebuilds, never on the per-query
+        path (refinement dequantizes only the candidate rows).
+        """
+        if self.storage == "f32":
+            return self.data
+        return qz.dequantize_rows(self.data, self.data_scale, self.data_zp,
+                                  self.family)
+
     def tree_flatten(self):
         dyn = (self.data, self.point_ids, self.alpha, self.sqrt_gamma,
                self.assign, self.alpha_min, self.sqrt_gamma_max, self.counts,
                self.centers, self.beta_samples, self.alpha_min_pt,
-               self.sqrt_gamma_max_pt, self.gamma_edges)
-        static = (self.family_name, self.partition, self.num_clusters)
+               self.sqrt_gamma_max_pt, self.gamma_edges,
+               self.data_scale, self.data_zp, self.alpha_scale, self.alpha_zp,
+               self.sg_scale, self.sg_zp, self.amin_scale, self.amin_zp,
+               self.gmax_scale, self.gmax_zp)
+        static = (self.family_name, self.partition, self.num_clusters,
+                  self.storage)
         return dyn, static
 
     @classmethod
     def tree_unflatten(cls, static, dyn):
-        return cls(static[0], static[1], static[2], *dyn)
+        return cls(static[0], static[1], static[2], *dyn[:13],
+                   storage=static[3],
+                   data_scale=dyn[13], data_zp=dyn[14],
+                   alpha_scale=dyn[15], alpha_zp=dyn[16],
+                   sg_scale=dyn[17], sg_zp=dyn[18],
+                   amin_scale=dyn[19], amin_zp=dyn[20],
+                   gmax_scale=dyn[21], gmax_zp=dyn[22])
 
 
 jax.tree_util.register_pytree_node(
@@ -89,11 +139,23 @@ jax.tree_util.register_pytree_node(
 
 # Point-major (n, ...) fields — the arrays a data-parallel shard slices.
 # Everything else (per-cluster corners, centers, beta samples) is small and
-# replicated on every shard.
+# replicated on every shard.  The int8 storage tier adds the per-row decode
+# fields; every consumer that walks point-major arrays must go through
+# point_fields(forest), not the bare f32 tuple.
 POINT_FIELDS = ("data", "point_ids", "alpha", "sqrt_gamma", "assign",
                 "alpha_min_pt", "sqrt_gamma_max_pt")
+QUANT_FIELDS = ("data_scale", "data_zp", "alpha_scale", "alpha_zp",
+                "sg_scale", "sg_zp", "amin_scale", "amin_zp",
+                "gmax_scale", "gmax_zp")
 REPLICATED_FIELDS = ("alpha_min", "sqrt_gamma_max", "counts", "centers",
                      "beta_samples", "gamma_edges")
+
+
+def point_fields(index_or_storage) -> tuple:
+    """The point-major field names of an index (storage-variant aware)."""
+    storage = getattr(index_or_storage, "storage", index_or_storage)
+    return POINT_FIELDS + QUANT_FIELDS if storage == "int8" else POINT_FIELDS
+
 
 # Corner sentinel for padded rows: an alpha_min_pt of +PAD_CORNER makes the
 # tuple-space lower bound exceed any finite search bound, so a padded row
@@ -110,19 +172,41 @@ INERT_FILL = {"data": 1.0, "point_ids": -1, "alpha": PAD_CORNER,
               "sqrt_gamma": 0.0, "assign": 0, "alpha_min_pt": PAD_CORNER,
               "sqrt_gamma_max_pt": 0.0}
 
+# Int8-tier inert row: all codes zero; the sentinels move into the per-row
+# decode fields (zero scales so an inert row adds no bound slack, PAD_CORNER
+# zero-points where the f32 fill is PAD_CORNER, data_zp 1.0 so the
+# dequantized row is the same domain-safe ones-row as the f32 fill).
+INERT_FILL_INT8 = {
+    "data": 0, "point_ids": -1, "alpha": 0, "sqrt_gamma": 0, "assign": 0,
+    "alpha_min_pt": 0, "sqrt_gamma_max_pt": 0,
+    "data_scale": 0.0, "data_zp": 1.0,
+    "alpha_scale": 0.0, "alpha_zp": PAD_CORNER,
+    "sg_scale": 0.0, "sg_zp": 0.0,
+    "amin_scale": 0.0, "amin_zp": PAD_CORNER,
+    "gmax_scale": 0.0, "gmax_zp": 0.0,
+}
+
+
+def inert_fill(index_or_storage) -> dict:
+    """Per-field inert fill values for an index's storage tier."""
+    storage = getattr(index_or_storage, "storage", index_or_storage)
+    return INERT_FILL_INT8 if storage == "int8" else INERT_FILL
+
 
 def pad_points(forest: BallForest, multiple: int) -> BallForest:
     """Pad the point-major arrays with inert rows so ``n % multiple == 0``."""
     pad = (-forest.n) % multiple
     if pad == 0:
         return forest
+    fill = inert_fill(forest)
 
     def pad_rows(a, v):
         return jnp.concatenate(
             [a, jnp.full((pad,) + a.shape[1:], v, a.dtype)], axis=0)
 
     return dataclasses.replace(forest, **{
-        f: pad_rows(getattr(forest, f), INERT_FILL[f]) for f in POINT_FIELDS})
+        f: pad_rows(getattr(forest, f), fill[f])
+        for f in point_fields(forest)})
 
 
 def tombstone_rows(forest: BallForest, dead: Array) -> BallForest:
@@ -135,13 +219,14 @@ def tombstone_rows(forest: BallForest, dead: Array) -> BallForest:
     three search paths skip it without knowing deletions exist.
     """
     dead = jnp.asarray(dead, bool)
+    fill = inert_fill(forest)
 
     def patch(a, v):
         d = dead.reshape((-1,) + (1,) * (a.ndim - 1))
         return jnp.where(d, jnp.asarray(v, a.dtype), a)
 
     return dataclasses.replace(forest, **{
-        f: patch(getattr(forest, f), INERT_FILL[f]) for f in POINT_FIELDS})
+        f: patch(getattr(forest, f), fill[f]) for f in point_fields(forest)})
 
 
 def concat_points(forests) -> BallForest:
@@ -157,13 +242,14 @@ def concat_points(forests) -> BallForest:
     for f in forests[1:]:
         if (f.family_name != head.family_name
                 or f.partition != head.partition
-                or f.num_clusters != head.num_clusters):
+                or f.num_clusters != head.num_clusters
+                or f.storage != head.storage):
             raise ValueError("concat_points needs segments of one index")
     if len(forests) == 1:
         return head
     return dataclasses.replace(head, **{
         f: jnp.concatenate([getattr(seg, f) for seg in forests], axis=0)
-        for f in POINT_FIELDS})
+        for f in point_fields(head)})
 
 
 def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
@@ -176,11 +262,33 @@ def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
     return dataclasses.replace(forest, **{
         f: jax.lax.slice_in_dim(getattr(forest, f), start, start + size,
                                 axis=0)
-        for f in POINT_FIELDS})
+        for f in point_fields(forest)})
 
 
 def default_num_clusters(n: int) -> int:
     return int(np.clip(n // 32, 8, 8192))
+
+
+def quantize_point_tables(forest: BallForest, data_codes: Array,
+                          data_scale: Array, data_zp: Array) -> BallForest:
+    """Swap a built fp32 forest's point-major tables for the int8 tier.
+
+    ``data_codes``/``data_scale``/``data_zp`` must dequantize EXACTLY to
+    ``forest.data`` (the forest was built over the dequantized rows, so the
+    stats/corners being re-encoded here were computed from the point set
+    the codes decode to).  Filter stats round to nearest (covered by the
+    `_qb_slack` bound inflation at query time); corner stats round
+    directionally so the Theorem-3 test stays conservative with no
+    query-time correction.
+    """
+    if forest.storage != "f32":
+        raise ValueError("quantize_point_tables wants an f32 forest")
+    return dataclasses.replace(
+        forest, storage="int8",
+        data=data_codes, data_scale=data_scale, data_zp=data_zp,
+        **qz.encode_stat_tables(forest.alpha, forest.sqrt_gamma,
+                                forest.alpha_min_pt,
+                                forest.sqrt_gamma_max_pt))
 
 
 def build_index(
@@ -193,6 +301,7 @@ def build_index(
     kmeans_iters: int = 12,
     beta_sample_size: int = 4096,
     gamma_buckets: int = 4,
+    quantize: bool = False,
     seed: int = 0,
 ) -> BallForest:
     """Offline precomputation (paper Alg. 5): partition -> transform -> forest.
@@ -206,9 +315,20 @@ def build_index(
     buckets whose gamma spread is ~1/gamma_buckets of the ball's — strictly
     tighter, still conservative (each point belongs to exactly one bucket
     and its bucket's corner lower-bounds its distance).
+
+    ``quantize=True`` builds the int8 storage tier: ``data`` is snapped to
+    per-row int8 FIRST and the whole index (clustering, transforms,
+    corners, beta samples) is built over the dequantized rows, so every
+    stored stat describes exactly the point set search will refine against
+    (docs/quantization.md).  Search over the result is exact w.r.t. those
+    dequantized points — identical ids/distances to an fp32 index built
+    over ``rows_view()``.
     """
     fam = get_family(family) if isinstance(family, str) else family
     data = jnp.asarray(data, dtype=jnp.float32)
+    if quantize:
+        data_codes, data_scale, data_zp = qz.quantize_rows(data)
+        data = qz.dequantize_rows(data_codes, data_scale, data_zp, fam)
     n, d = data.shape
     data_np = np.asarray(data)
 
@@ -297,7 +417,7 @@ def build_index(
     betas = -np.sum(data_np[xi] * grads, axis=-1)
     beta_samples = jnp.sort(jnp.asarray(betas, dtype=jnp.float32))
 
-    return BallForest(
+    forest = BallForest(
         family_name=fam.name,
         partition=part,
         num_clusters=c_eff,
@@ -315,3 +435,7 @@ def build_index(
         sqrt_gamma_max_pt=gmax_pt,
         gamma_edges=gamma_edges,
     )
+    if quantize:
+        forest = quantize_point_tables(
+            forest, data_codes[order], data_scale[order], data_zp[order])
+    return forest

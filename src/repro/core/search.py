@@ -52,6 +52,15 @@ Every public entry point also accepts the mutable
 :class:`~repro.core.segments.SegmentedForest`: it is snapshotted to its
 one-BallForest view (``_as_forest``), whose tombstoned rows are
 search-inert in the filter, prune, and refine phases by construction.
+
+Storage tiers: all paths run unchanged on the int8 BallForest
+(``build_index(quantize=True)``).  The filter streams int8 codes through
+the quantized UB kernel and inflates the Alg.-4 bounds by the stat
+rounding slack (:func:`_qb_slack`), the prune decodes directed-rounded
+(conservative) corner codes, and the refine runs the fused
+dequantize+refine kernel on the surviving candidate rows — exact results
+over the decoded point set at ~4x lower filter traffic
+(docs/quantization.md).
 """
 
 from __future__ import annotations
@@ -67,6 +76,7 @@ from .bregman import get_family
 from .index import BallForest
 from .transform import q_transform
 from . import bounds
+from . import quantize as qz
 
 Array = jax.Array
 
@@ -122,6 +132,59 @@ def _as_forest(index, k: int | None = None) -> BallForest:
     return view() if callable(view) else index
 
 
+def _tuple_rows(index: BallForest, idx: Array) -> dict:
+    """Dequantized (alpha, sqrt_gamma) P-tuples at the given row indices.
+
+    ``idx`` may be a scalar, (k,) or (q, k); fields come back with a
+    trailing (M,) axis.  In the f32 tier this is a plain gather (bit-
+    identical to reading the tables); in the int8 tier the gathered codes
+    are decoded with their per-row affine — only the touched rows ever
+    reach fp32.
+    """
+    a = jnp.take(index.alpha, idx, axis=0)
+    g = jnp.take(index.sqrt_gamma, idx, axis=0)
+    if index.storage == "int8":
+        a = qz.dequantize_stats(a, jnp.take(index.alpha_scale, idx),
+                                jnp.take(index.alpha_zp, idx))
+        g = qz.dequantize_stats(g, jnp.take(index.sg_scale, idx),
+                                jnp.take(index.sg_zp, idx))
+    return {"alpha": a, "sqrt_gamma": g}
+
+
+def _qb_slack(index: BallForest, idx: Array, sqrt_delta: Array):
+    """Quantization slack for the Alg.-4 searching bounds (0 in f32).
+
+    Admissibility (docs/quantization.md): among the k rows whose DECODED
+    upper bounds are smallest, every row j satisfies
+    ``UB_true(j) <= UB_hat(j) + eps_j`` with ``eps_j = sum_i (alpha_scale_j
+    + sg_scale_j * sqrt_delta_i) / 2``, so the k-th smallest true distance
+    is at most the k-th decoded UB plus ``max_j eps_j``.  The slack is
+    distributed per subspace (componentwise max over the k rows) so the
+    pigeonhole step of Theorem 3 still applies to the inflated ``qb``.
+
+    ``idx`` is the filter's (…, k) top-k row indices; returns (…, M).
+    """
+    if index.storage != "int8":
+        return jnp.zeros_like(sqrt_delta)
+    a_s = jnp.max(jnp.take(index.alpha_scale, idx, axis=0), axis=-1)
+    g_s = jnp.max(jnp.take(index.sg_scale, idx, axis=0), axis=-1)
+    return qz.ub_slack(a_s, g_s, sqrt_delta)
+
+
+def _corner_tables(index: BallForest) -> tuple[Array, Array]:
+    """Full (n, M) fp32 corner tables (decoded in the int8 tier).
+
+    The int8 corners were DIRECTED-rounded at build (alpha_min floored,
+    sqrt_gamma_max ceiled), so the decoded values are conservative and the
+    Theorem-3 admission below needs no slack term.
+    """
+    amin, gmax = index.alpha_min_pt, index.sqrt_gamma_max_pt
+    if index.storage == "int8":
+        amin = qz.dequantize_stats(amin, index.amin_scale, index.amin_zp)
+        gmax = qz.dequantize_stats(gmax, index.gmax_scale, index.gmax_zp)
+    return amin, gmax
+
+
 def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
                   sqrt_delta: Array, qb: Array, sub_axis: int) -> Array:
     """THE Theorem-3 membership test, shared by every search path.
@@ -143,7 +206,8 @@ def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
 
 def _candidate_mask(index: BallForest, q: dict, qb: Array) -> Array:
     """Theorem-3 union membership for one query. (n,) bool."""
-    return _corner_admit(index.alpha_min_pt, index.sqrt_gamma_max_pt,
+    amin, gmax = _corner_tables(index)
+    return _corner_admit(amin, gmax,
                          q["qconst"], q["sqrt_delta"], qb, sub_axis=-1)
 
 
@@ -154,20 +218,39 @@ def _refine(index: BallForest, q: dict, sel: Array, valid: Array, k: int):
     return ids[0], dists[0]
 
 
+def _single_filter(index: BallForest, q: dict, k: int):
+    """Filter phase for one query: (totals (n,), top-k idx (k,), qb (M,)).
+
+    f32 storage runs the original ub_filter; the int8 tier streams the
+    codes through the quantized UB kernel and inflates the Alg.-4 bounds
+    by the stat rounding slack (`_qb_slack`) so the downstream prune stays
+    admissible over the decoded point set.
+    """
+    from repro.kernels import ops as kernel_ops
+    if index.storage == "int8":
+        totals = kernel_ops.bregman_ub_matrix_quant(
+            index.alpha, index.alpha_scale, index.alpha_zp,
+            index.sqrt_gamma, index.sg_scale, index.sg_zp,
+            q["qconst"][None], q["sqrt_delta"][None])[:, 0]
+        _, idx = jax.lax.top_k(-totals, k)
+        qb = (bounds.ub_components(_tuple_rows(index, idx[-1]), q)
+              + _qb_slack(index, idx, q["sqrt_delta"]))
+    else:
+        totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
+            index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"])
+        _, idx = jax.lax.top_k(-totals, k)
+        qb = comp_kth_fn(idx[-1])
+    return totals, idx, qb
+
+
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
 def _knn_search_jit(index: BallForest, y: Array, k: int,
                     budget: int) -> SearchResult:
     """Exact kNN for one query (jit core, static budget)."""
-    from repro.kernels import ops as kernel_ops
     q = _query_struct(index, y)
 
     # ---- filter: total UB for every point (MXU matmul form) ----
-    totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
-        index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"]
-    )
-    _, idx = jax.lax.top_k(-totals, k)
-    kth = idx[-1]
-    qb = comp_kth_fn(kth)                              # (M,) Alg. 4 bounds
+    totals, _idx, qb = _single_filter(index, q, k)     # (M,) Alg. 4 bounds
 
     # ---- ball pruning + union (Theorem 3) ----
     mask = _candidate_mask(index, q, qb)
@@ -198,20 +281,18 @@ def _knn_search_approx_jit(
     The Cauchy slack mu of the k-th bound is shrunk to c*mu with
     ``c = Psi^-1(p*Psi(mu) + (1-p)*Psi(-kappa)) / mu`` where Psi is the
     empirical CDF of the cross term beta_xy (index.beta_samples); each
-    subspace bound's sqrt term is scaled by c.
+    subspace bound's sqrt term is scaled by c.  In the int8 tier the
+    quantization slack inflates ``qb`` BEFORE the shrink (matching the
+    batched and distributed paths), so the probabilistic guarantee holds
+    w.r.t. the decoded point set.
     """
-    from repro.kernels import ops as kernel_ops
     q = _query_struct(index, y)
 
-    totals, comp_kth_fn = kernel_ops.bregman_ub_filter(
-        index.alpha, index.sqrt_gamma, q["qconst"], q["sqrt_delta"]
-    )
-    neg_vals, idx = jax.lax.top_k(-totals, k)
+    totals, idx, qb = _single_filter(index, q, k)
     kth = idx[-1]
-    qb = comp_kth_fn(kth)
 
     # Full-space kappa and mu of the k-th bound (paper §8 notation).
-    sqrt_term = jnp.take(index.sqrt_gamma, kth, axis=0) * q["sqrt_delta"]  # (M,)
+    sqrt_term = _tuple_rows(index, kth)["sqrt_gamma"] * q["sqrt_delta"]  # (M,)
     kappa_i = qb - sqrt_term                           # per-subspace kappa
     kappa = jnp.sum(kappa_i)
     mu = jnp.sum(sqrt_term)
@@ -276,15 +357,23 @@ def _pad_blocks(arr: Array, bn: int, nb: int, fill: float = 0.0) -> Array:
                    constant_values=fill).reshape(nb, bn, arr.shape[1])
 
 
+def _pad_cols(arr: Array, bn: int, nb: int, fill: float = 0.0) -> Array:
+    """Pad a per-row (n,) column up to nb*bn and reshape to (nb, bn)."""
+    pad = nb * bn - arr.shape[0]
+    return jnp.pad(arr, (0, pad), constant_values=fill).reshape(nb, bn)
+
+
 def _batch_filter_topk(index: BallForest, qs: dict, k: int,
                        block_rows: int) -> tuple[Array, Array]:
     """Streaming per-column k-selection over the (n, q) UB matrix.
 
-    One ``bregman_ub_matrix`` call per row block inside a scan; the carry is
+    One UB-matrix kernel call per row block inside a scan; the carry is
     the running (q, k) smallest totals + their global row indices, so peak
     memory is O(block_rows * q) regardless of n.  Ties resolve to the lower
     row index (carry rows precede the block in the merge concat), matching
-    ``lax.top_k`` over the full column.
+    ``lax.top_k`` over the full column.  The int8 tier streams code blocks
+    plus their per-row decode scalars through the quantized kernel — the
+    full-width (n, M) reads are 1-byte, the 4x traffic win of the tier.
     """
     from repro.kernels import ops as kernel_ops
     n = index.alpha.shape[0]
@@ -293,12 +382,26 @@ def _batch_filter_topk(index: BallForest, qs: dict, k: int,
     alpha_b = _pad_blocks(index.alpha, bn, nb)
     sg_b = _pad_blocks(index.sqrt_gamma, bn, nb)
     offs = jnp.arange(nb, dtype=jnp.int32) * bn
+    if index.storage == "int8":
+        xs = (alpha_b, sg_b,
+              _pad_cols(index.alpha_scale, bn, nb),
+              _pad_cols(index.alpha_zp, bn, nb),
+              _pad_cols(index.sg_scale, bn, nb),
+              _pad_cols(index.sg_zp, bn, nb), offs)
+    else:
+        xs = (alpha_b, sg_b, offs)
 
     def step(carry, blk):
         best_v, best_i = carry                          # (q, k) each
-        a, sg, off = blk
-        vals = kernel_ops.bregman_ub_matrix(
-            a, sg, qs["qconst"], qs["sqrt_delta"])      # (bn, q)
+        if index.storage == "int8":
+            a, sg, a_s, a_z, g_s, g_z, off = blk
+            vals = kernel_ops.bregman_ub_matrix_quant(
+                a, a_s, a_z, sg, g_s, g_z,
+                qs["qconst"], qs["sqrt_delta"])         # (bn, q)
+        else:
+            a, sg, off = blk
+            vals = kernel_ops.bregman_ub_matrix(
+                a, sg, qs["qconst"], qs["sqrt_delta"])  # (bn, q)
         gidx = off + jnp.arange(bn, dtype=jnp.int32)
         vals = jnp.where((gidx < n)[:, None], vals, POS_BIG)
         cand_v = jnp.concatenate([best_v, vals.T], axis=1)          # (q, k+bn)
@@ -309,7 +412,7 @@ def _batch_filter_topk(index: BallForest, qs: dict, k: int,
 
     init = (jnp.full((q, k), POS_BIG, jnp.float32),
             jnp.zeros((q, k), jnp.int32))
-    (vals, idx), _ = jax.lax.scan(step, init, (alpha_b, sg_b, offs))
+    (vals, idx), _ = jax.lax.scan(step, init, xs)
     return vals, idx                                    # ascending along k
 
 
@@ -323,21 +426,39 @@ def _candidate_mask_batch(index: BallForest, qs: dict, qb: Array,
     n = index.alpha_min_pt.shape[0]
     q = qb.shape[0]
     bn, nb = _block_layout(n, block_rows)
-    # Padded rows are sliced off below ([:n]); the +inf corner fill is
-    # belt-and-braces only (unlike _batch_filter_topk's padding, which is
-    # load-bearing via the gidx < n mask).
-    amin_b = _pad_blocks(index.alpha_min_pt, bn, nb, fill=POS_BIG)
-    gmax_b = _pad_blocks(index.sqrt_gamma_max_pt, bn, nb)
     qc = qs["qconst"].T[None, :, :]                     # (1, M, q)
     sd = qs["sqrt_delta"].T[None, :, :]                 # (1, M, q)
     qbT = qb.T[None, :, :]                              # (1, M, q)
 
-    def block_mask(blk):
-        amin, gmax = blk                                # (bn, M)
-        return _corner_admit(amin[:, :, None], gmax[:, :, None],
-                             qc, sd, qbT, sub_axis=1)   # (bn, q)
+    if index.storage == "int8":
+        # Stream the corner CODES (1 byte/entry) and decode per block; the
+        # PAD_CORNER sentinel rides in the padded rows' zero-point.
+        blocks = (_pad_blocks(index.alpha_min_pt, bn, nb),
+                  _pad_blocks(index.sqrt_gamma_max_pt, bn, nb),
+                  _pad_cols(index.amin_scale, bn, nb),
+                  _pad_cols(index.amin_zp, bn, nb, fill=POS_BIG),
+                  _pad_cols(index.gmax_scale, bn, nb),
+                  _pad_cols(index.gmax_zp, bn, nb))
 
-    mask = jax.lax.map(block_mask, (amin_b, gmax_b))    # (nb, bn, q)
+        def block_mask(blk):
+            am_q, gm_q, a_s, a_z, g_s, g_z = blk
+            amin = qz.dequantize_stats(am_q, a_s, a_z)  # (bn, M)
+            gmax = qz.dequantize_stats(gm_q, g_s, g_z)
+            return _corner_admit(amin[:, :, None], gmax[:, :, None],
+                                 qc, sd, qbT, sub_axis=1)   # (bn, q)
+    else:
+        # Padded rows are sliced off below ([:n]); the +inf corner fill is
+        # belt-and-braces only (unlike _batch_filter_topk's padding, which
+        # is load-bearing via the gidx < n mask).
+        blocks = (_pad_blocks(index.alpha_min_pt, bn, nb, fill=POS_BIG),
+                  _pad_blocks(index.sqrt_gamma_max_pt, bn, nb))
+
+        def block_mask(blk):
+            amin, gmax = blk                            # (bn, M)
+            return _corner_admit(amin[:, :, None], gmax[:, :, None],
+                                 qc, sd, qbT, sub_axis=1)   # (bn, q)
+
+    mask = jax.lax.map(block_mask, blocks)              # (nb, bn, q)
     return mask.reshape(nb * bn, q)[:n]
 
 
@@ -365,11 +486,24 @@ def _compact_candidates(mask: Array, budget: int) -> tuple[Array, Array, Array]:
 
 def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
                   k: int):
-    """One batched kernel call refines all queries' candidate rows."""
+    """One batched kernel call refines all queries' candidate rows.
+
+    The int8 tier gathers candidate CODES (1 byte/coord) plus two decode
+    scalars per row and runs the fused dequantize+refine kernel, so the
+    full fp32 point table never exists — exact distances over the decoded
+    point set, 4x less refine gather traffic.
+    """
     from repro.kernels import ops as kernel_ops
-    rows = jnp.take(index.data, sel, axis=0)            # (q, budget, d)
-    dist = kernel_ops.bregman_refine_batch(
-        rows, qs["grad"], qs["c_y"], index.family_name)  # (q, budget)
+    if index.storage == "int8":
+        codes = jnp.take(index.data, sel, axis=0)       # (q, budget, d) int8
+        scale = jnp.take(index.data_scale, sel)         # (q, budget)
+        zp = jnp.take(index.data_zp, sel)
+        dist = kernel_ops.bregman_refine_batch_quant(
+            codes, scale, zp, qs["grad"], qs["c_y"], index.family_name)
+    else:
+        rows = jnp.take(index.data, sel, axis=0)        # (q, budget, d)
+        dist = kernel_ops.bregman_refine_batch(
+            rows, qs["grad"], qs["c_y"], index.family_name)  # (q, budget)
     dist = jnp.where(valid, dist, POS_BIG)
     neg, pos = jax.lax.top_k(-dist, k)                  # (q, k)
     ids = jnp.take(index.point_ids,
@@ -392,13 +526,15 @@ def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
     qs = _query_struct(index, ys)                       # all fields (q, ...)
 
     # ---- phase 1+2: one fused filter matmul + streaming k-selection ----
-    # Only the k-th row index matters downstream: qb encodes the k-th UB.
+    # The k-th row's tuple sets qb; the full top-k indices feed the int8
+    # tier's bound slack (max rounding error over the rows that could have
+    # determined the k-th UB).
     _, idx = _batch_filter_topk(index, qs, k, block_rows)
     kth = idx[:, -1]                                    # (q,)
-    kth_tuple = {"alpha": jnp.take(index.alpha, kth, axis=0),
-                 "sqrt_gamma": jnp.take(index.sqrt_gamma, kth, axis=0)}
+    kth_tuple = _tuple_rows(index, kth)
     sqrt_term = kth_tuple["sqrt_gamma"] * qs["sqrt_delta"]       # (q, M)
-    qb = bounds.ub_components(kth_tuple, qs)            # (q, M) Alg. 4
+    qb = (bounds.ub_components(kth_tuple, qs)           # (q, M) Alg. 4
+          + _qb_slack(index, idx, qs["sqrt_delta"]))
 
     if p_guarantee is not None:                         # §8 shrink, batched
         kappa_i = qb - sqrt_term
@@ -561,10 +697,13 @@ def _brute_force_live(index: BallForest, ys: Array, k: int):
     Unlike :func:`brute_force_knn` over ``index.data``, this masks
     tombstoned/padded rows (``point_ids < 0``, whose data is the inert
     ones-fill at a finite distance) so a mutated index never surfaces a
-    deleted id even on the budget-cap escape hatch.
+    deleted id even on the budget-cap escape hatch.  ``rows_view`` decodes
+    the int8 tier, so the scan is exact over the stored point set there
+    too.
     """
     fam = index.family
-    dist = jax.vmap(lambda y: fam.distance(index.data, y[None, :]))(ys)
+    rows = index.rows_view()
+    dist = jax.vmap(lambda y: fam.distance(rows, y[None, :]))(ys)
     dist = jnp.where((index.point_ids >= 0)[None, :], dist, POS_BIG)
     neg, idx = jax.lax.top_k(-dist, k)                  # (q, k)
     return jnp.take(index.point_ids, idx), -neg

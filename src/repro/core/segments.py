@@ -51,13 +51,14 @@ from .bregman import BregmanFamily
 from .clustering import cluster_stats, pairwise_bregman
 from .index import (
     BallForest,
-    POINT_FIELDS,
     build_index,
     concat_points,
+    point_fields,
     tombstone_rows,
 )
 from .partition import CostModel, decide_compaction, fit_cost_model
 from .transform import p_transform_views
+from . import quantize as qz
 
 Array = jax.Array
 
@@ -73,11 +74,20 @@ def _append_segment(main: BallForest, points: Array,
     Reuses the sealed partition / transforms / centroids / bucket edges;
     recomputes only the per-point P-tuples, the nearest-centroid
     assignment, and the (singleton) per-point corner stats.
+
+    In the int8 storage tier the new points are snapped to int8 FIRST
+    (fresh per-row affines — the sealed part of the quantizer is the
+    scheme, the scales travel with each row) and the transforms run over
+    the decoded rows, so the appended segment obeys the same contract as
+    the main one: its stats describe exactly the rows refine will decode.
     """
     part, fam = main.partition, main.family
     pts = jnp.asarray(points, jnp.float32)
     if pts.ndim != 2 or pts.shape[1] != main.d:
         raise ValueError(f"expected (a, {main.d}) points, got {pts.shape}")
+    if main.storage == "int8":
+        codes, d_scale, d_zp = qz.quantize_rows(pts)
+        pts = qz.dequantize_rows(codes, d_scale, d_zp, fam)
     sub = part.gather(pts)                          # (a, M, w)
     mask = part.subspace_mask()
     p = p_transform_views(sub, mask, fam)
@@ -100,6 +110,14 @@ def _append_segment(main: BallForest, points: Array,
     # Singleton corners: the point's own lower-bound tuple.  Conservative
     # (lb = LB_i(x, y) <= D_i(x, y)) and tighter than any shared corner, so
     # appended points need no update to the sealed cluster tables.
+    if main.storage == "int8":
+        # Exact per-point stats are in hand, so the (singleton) corner
+        # codes round directionally from the TRUE values — same
+        # conservatism as build, one shared encode rule.
+        return dataclasses.replace(
+            main, data=codes, data_scale=d_scale, data_zp=d_zp,
+            point_ids=ids, assign=assign_eff,
+            **qz.encode_stat_tables(alpha, sqrt_gamma, alpha, sqrt_gamma))
     return dataclasses.replace(
         main, data=pts, point_ids=ids, alpha=alpha, sqrt_gamma=sqrt_gamma,
         assign=assign_eff, alpha_min_pt=alpha, sqrt_gamma_max_pt=sqrt_gamma)
@@ -161,6 +179,10 @@ class SegmentedForest:
     @property
     def num_clusters(self) -> int:
         return self.main.num_clusters
+
+    @property
+    def storage(self) -> str:
+        return self.main.storage
 
     @property
     def n(self) -> int:
@@ -256,8 +278,7 @@ class SegmentedForest:
     def fitted_cost_model(self) -> CostModel:
         """The Theorem-4 model for merge-vs-rebuild (fit lazily, cached)."""
         if self.cost_model is None:
-            (data,) = self._live_arrays(("data",))
-            self.cost_model = fit_cost_model(data, self.family)
+            self.cost_model = fit_cost_model(self._live_rows(), self.family)
         return self.cost_model
 
     def decide(self) -> str:
@@ -294,8 +315,10 @@ class SegmentedForest:
         self.cost_model = None
         return mode
 
-    def _live_arrays(self, fields=POINT_FIELDS) -> tuple[np.ndarray, ...]:
+    def _live_arrays(self, fields=None) -> tuple[np.ndarray, ...]:
         """Host copies of the live rows of the given point-major fields."""
+        if fields is None:
+            fields = point_fields(self.main)
         blocks = [self.main] + self.segments
         out = []
         for f in fields:
@@ -304,15 +327,29 @@ class SegmentedForest:
                 for b, mask in zip(blocks, self.live)]))
         return tuple(out)
 
+    def _live_rows(self) -> np.ndarray:
+        """Live fp32 point rows (decoded in the int8 tier), layout order."""
+        blocks = [self.main] + self.segments
+        return np.concatenate([
+            np.asarray(b.rows_view())[mask]
+            for b, mask in zip(blocks, self.live)])
+
     def _rebuild(self, seed: int) -> BallForest:
-        """Full Alg.-5 rebuild over the live points, original ids kept."""
-        data, ids = self._live_arrays(("data", "point_ids"))
+        """Full Alg.-5 rebuild over the live points, original ids kept.
+
+        In the int8 tier the rebuild re-quantizes the decoded rows with
+        fresh per-row affines, so stored points may drift by at most one
+        quantization step per coordinate (docs/quantization.md); a merge
+        preserves them bit-exactly.
+        """
+        (ids,) = self._live_arrays(("point_ids",))
+        data = self._live_rows()
         num_centers = self.main.centers.shape[1]
         nb = max(self.main.num_clusters // num_centers, 1)
         forest = build_index(
             data, self.family_name, m=self.m,
             num_clusters=min(num_centers, data.shape[0]),
-            gamma_buckets=nb, seed=seed)
+            gamma_buckets=nb, quantize=self.storage == "int8", seed=seed)
         # build_index ids index into `data`; route them through the
         # original-id map so external references survive the rebuild.
         return dataclasses.replace(
@@ -321,30 +358,58 @@ class SegmentedForest:
 
     def _merge(self) -> BallForest:
         """Cheap re-seal: keep the sealed centroids/buckets, drop dead rows,
-        restore the shared layout, recompute the corner tables exactly."""
-        (data, ids, alpha, sqrt_gamma, assign,
-         _amin_pt, _gmax_pt) = self._live_arrays()
-        order = np.argsort(assign[:, 0], kind="stable")
-        data, ids = jnp.asarray(data[order]), jnp.asarray(ids[order])
-        alpha = jnp.asarray(alpha[order])
-        sqrt_gamma = jnp.asarray(sqrt_gamma[order])
-        assign = jnp.asarray(assign[order])
+        restore the shared layout, recompute the corner tables exactly.
+
+        Int8 tier: data/stat codes and their per-row decode move as
+        opaque rows (the stored points are bit-identical after the merge);
+        only the corner tables are refit — from a CONSERVATIVE decode of
+        the stat codes (nearest-rounded, so the true stat may be half a
+        step to either side) and then directed-rounded again, keeping the
+        Theorem-3 test admissible across compactions.
+        """
+        fields = point_fields(self.main)
+        arrays = dict(zip(fields, self._live_arrays(fields)))
+        order = np.argsort(arrays["assign"][:, 0], kind="stable")
+        arrays = {f: jnp.asarray(a[order]) for f, a in arrays.items()}
+
+        if self.main.storage == "int8":
+            # Worst-case true stats behind the nearest-rounded codes: alpha
+            # may be up to scale/2 below its decode, sqrt_gamma up to
+            # scale/2 above, so min/max over these envelopes bound the
+            # min/max of the true values.
+            alpha = qz.dequantize_stats(
+                arrays["alpha"], arrays["alpha_scale"], arrays["alpha_zp"])
+            sqrt_gamma = qz.dequantize_stats(
+                arrays["sqrt_gamma"], arrays["sg_scale"], arrays["sg_zp"])
+            alpha_lo = alpha - qz.UB_SLACK * arrays["alpha_scale"][:, None]
+            sg_hi = sqrt_gamma + qz.UB_SLACK * arrays["sg_scale"][:, None]
+        else:
+            alpha = alpha_lo = arrays["alpha"]
+            sqrt_gamma = sg_hi = arrays["sqrt_gamma"]
+        assign = arrays["assign"]
 
         c_eff, m = self.num_clusters, self.m
-        stats_a = [cluster_stats(alpha[:, i], assign[:, i], c_eff)
+        stats_a = [cluster_stats(alpha_lo[:, i], assign[:, i], c_eff)
                    for i in range(m)]
-        stats_g = [cluster_stats(sqrt_gamma[:, i], assign[:, i], c_eff)
+        stats_g = [cluster_stats(sg_hi[:, i], assign[:, i], c_eff)
                    for i in range(m)]
         amin = jnp.stack([s["min"] for s in stats_a])
         gmax = jnp.stack([s["max"] for s in stats_g])
         counts = jnp.stack([s["count"] for s in stats_a])
         take_pt = jax.vmap(lambda a, s: a[s], in_axes=(0, 1), out_axes=1)
+        amin_pt, gmax_pt = take_pt(amin, assign), take_pt(gmax, assign)
+        if self.main.storage == "int8":
+            corners = qz.encode_corner_tables(amin_pt, gmax_pt)
+            return dataclasses.replace(
+                self.main,
+                **{f: arrays[f] for f in fields if f not in corners},
+                alpha_min=amin, sqrt_gamma_max=gmax, counts=counts,
+                **corners)
         return dataclasses.replace(
-            self.main, data=data, point_ids=ids, alpha=alpha,
-            sqrt_gamma=sqrt_gamma, assign=assign, alpha_min=amin,
-            sqrt_gamma_max=gmax, counts=counts,
-            alpha_min_pt=take_pt(amin, assign),
-            sqrt_gamma_max_pt=take_pt(gmax, assign))
+            self.main, data=arrays["data"], point_ids=arrays["point_ids"],
+            alpha=alpha, sqrt_gamma=sqrt_gamma, assign=assign,
+            alpha_min=amin, sqrt_gamma_max=gmax, counts=counts,
+            alpha_min_pt=amin_pt, sqrt_gamma_max_pt=gmax_pt)
 
 
 def build_segmented_index(data, family, **build_kwargs) -> SegmentedForest:

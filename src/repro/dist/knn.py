@@ -42,13 +42,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bounds
 from repro.core.bregman import get_family
-from repro.core.index import (BallForest, POINT_FIELDS, REPLICATED_FIELDS,
-                              pad_points)
+from repro.core.index import (BallForest, REPLICATED_FIELDS, pad_points,
+                              point_fields)
+from repro.core.quantize import ub_slack
 from repro.core.search import (DEFAULT_BLOCK_ROWS, MAX_BUDGET_DOUBLINGS,
                                SearchResult, _batch_filter_topk,
                                _candidate_mask_batch, _cdf_shrink,
                                _compact_candidates, _refine_batch,
-                               fitted_budget_for_n)
+                               _tuple_rows, fitted_budget_for_n)
 from repro.core.transform import Partition, q_transform_views
 from . import sharding as shd
 
@@ -134,35 +135,39 @@ def shard_index(forest, mesh: Mesh, axis: str = "data") -> ShardedForest:
 
     placed = dataclasses.replace(
         padded,
-        **{f: put(getattr(padded, f), P(axis)) for f in POINT_FIELDS},
+        **{f: put(getattr(padded, f), P(axis)) for f in point_fields(padded)},
         **{f: put(getattr(padded, f), P()) for f in REPLICATED_FIELDS})
     return ShardedForest(forest=placed, mesh=mesh, axis=axis,
                          global_n=forest.n, live_n=live_n)
 
 
-def _take_rows(a: Array, idx: Array) -> Array:
-    """(n, M) gathered at (q, k) row indices -> (q, k, M)."""
-    return jnp.take(a, idx, axis=0)
-
-
 @functools.lru_cache(maxsize=128)
 def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
-                      partition: Partition, num_clusters: int, k: int,
-                      budget: int, block_rows: int, approx: bool):
+                      partition: Partition, num_clusters: int, storage: str,
+                      k: int, budget: int, block_rows: int, approx: bool):
     """One jitted SPMD program per (mesh x index-static x k/budget) cell."""
     fam = get_family(family_name)
 
     def per_shard(arrs: dict, qs: dict, p_guarantee):
         # arrs carries exactly the dynamic BallForest fields; the statics
         # come from the program cell, so this IS the local shard's index.
-        local = BallForest(family_name, partition, num_clusters, **arrs)
+        local = BallForest(family_name, partition, num_clusters,
+                           storage=storage, **arrs)
         # ---- local filter + GLOBAL Alg.-4 bound via the k-way exchange ----
         vals, idx = _batch_filter_topk(local, qs, k, block_rows)
-        a_k = _take_rows(local.alpha, idx)              # (q, k, M)
-        g_k = _take_rows(local.sqrt_gamma, idx)
+        tup = _tuple_rows(local, idx)                   # decoded in int8 tier
+        a_k, g_k = tup["alpha"], tup["sqrt_gamma"]      # (q, k, M)
         vals_g = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
         a_g = jax.lax.all_gather(a_k, axis, axis=1, tiled=True)
         g_g = jax.lax.all_gather(g_k, axis, axis=1, tiled=True)
+        if storage == "int8":
+            # Ship each local top-k row's stat scales with its tuple: the
+            # global bound must carry the rounding slack of whichever
+            # shard's rows set the global k-th UB (docs/quantization.md).
+            sa_g = jax.lax.all_gather(
+                jnp.take(local.alpha_scale, idx), axis, axis=1, tiled=True)
+            sg_g = jax.lax.all_gather(
+                jnp.take(local.sg_scale, idx), axis, axis=1, tiled=True)
         neg, sel = jax.lax.top_k(-vals_g, k)            # global k smallest
         kth = sel[:, -1:, None]                         # (q, 1, 1)
         m = a_g.shape[-1]
@@ -172,6 +177,10 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
                 t, jnp.broadcast_to(kth, kth.shape[:1] + (1, m)), axis=1)[:, 0]
         kth_tuple = {"alpha": take_kth(a_g), "sqrt_gamma": take_kth(g_g)}
         qb = bounds.ub_components(kth_tuple, qs)        # (q, M)
+        if storage == "int8":
+            a_s = jnp.max(jnp.take_along_axis(sa_g, sel, axis=1), axis=-1)
+            g_s = jnp.max(jnp.take_along_axis(sg_g, sel, axis=1), axis=-1)
+            qb = qb + ub_slack(a_s, g_s, qs["sqrt_delta"])
         if approx:                                      # §8 shrink, batched
             sqrt_term = kth_tuple["sqrt_gamma"] * qs["sqrt_delta"]
             kappa_i = qb - sqrt_term
@@ -193,7 +202,7 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
                 overflowed == 0, jax.lax.psum(ncand, axis),
                 jax.lax.pmax(ncand, axis))
 
-    arr_specs = {**{f: P(axis) for f in POINT_FIELDS},
+    arr_specs = {**{f: P(axis) for f in point_fields(storage)},
                  **{f: P() for f in REPLICATED_FIELDS}}
     qs_specs = {f: P() for f in _QS_FIELDS}
     in_specs = (arr_specs, qs_specs, P()) if approx else (arr_specs, qs_specs)
@@ -238,12 +247,14 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
           else query_subview(forest.partition, queries))
     local_n = sharded.local_n
     b = max(min(int(budget), local_n), k)
-    arrs = {f: getattr(forest, f) for f in POINT_FIELDS + REPLICATED_FIELDS}
+    arrs = {f: getattr(forest, f)
+            for f in point_fields(forest) + REPLICATED_FIELDS}
     extra = () if approx_p is None else (jnp.float32(approx_p),)
 
     for attempt in range(max_doublings + 1):
         prog = _dist_knn_program(mesh, sharded.axis, forest.family_name,
-                                 forest.partition, forest.num_clusters, k, b,
+                                 forest.partition, forest.num_clusters,
+                                 forest.storage, k, b,
                                  block_rows, approx_p is not None)
         ids, dists, exact, ncand, need = prog(arrs, qv.y, qv.sub, *extra)
         if bool(jnp.all(exact)) or b >= local_n or attempt == max_doublings:

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.bregman import get_family
+from repro.core.quantize import DOMAIN_EPS, POSITIVE_FAMILIES
 
 # phi implementations usable inside the kernel (elementwise, mask-aware:
 # padded columns carry x=0 AND grad=0; `mask` zeroes the phi contribution).
@@ -114,4 +115,84 @@ def bregman_refine_batch(
         out_shape=jax.ShapeDtypeStruct((q, bp, 1), jnp.float32),
         interpret=interpret,
     )(r, g, mask)
+    return out[:, :b, 0] + c_y[:, None]
+
+
+def _make_quant_batch_kernel(phi, positive: bool):
+    def kernel(codes_ref, scale_ref, zp_ref, grad_ref, mask_ref, acc_ref):
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # Fused dequantize: the only HBM read of the candidate rows is the
+        # int8 codes; the affine decode (+ the domain clamp shared with
+        # core/quantize.dequantize_rows) happens on-chip per tile.
+        x = codes_ref[0].astype(jnp.float32)       # (bb, bd)
+        x = x * scale_ref[0][:, None] + zp_ref[0][:, None]
+        if positive:
+            x = jnp.maximum(x, DOMAIN_EPS)
+        grad = grad_ref[...]                       # (1, bd)
+        mask = mask_ref[...]                       # (1, bd)
+        fx = jnp.sum(phi(x) * mask, axis=-1, keepdims=True)          # VPU
+        cross = jnp.dot(x, grad.T, preferred_element_type=jnp.float32)
+        acc_ref[0] += fx - cross                   # (bb, 1)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "block_b", "block_d", "interpret")
+)
+def bregman_refine_batch_quant(
+    codes: jax.Array,   # (q, b, d) int8 candidate-row codes
+    scale: jax.Array,   # (q, b)    per-row affine scale
+    zp: jax.Array,      # (q, b)    per-row affine zero-point
+    grad: jax.Array,    # (q, d)    per-query phi'(y)
+    c_y: jax.Array,     # (q,)      per-query additive constant
+    family: str,
+    *,
+    block_b: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dequantize + exact D_f over int8 candidate rows -> (q, b).
+
+    The int8-tier sibling of :func:`bregman_refine_batch`: same grid, the
+    row tile arrives as codes plus two per-row decode scalars, and the
+    dequantized values match ``core/quantize.dequantize_rows`` bit for bit
+    so the reported distances are exact over the stored point set.
+    Padded rows decode via (scale 0, zp 1) to the domain-safe ones-row;
+    padded columns carry code 0 with grad/mask 0.
+    """
+    fam = get_family(family)
+    phi = _PHIS[fam.name]
+    positive = fam.name in POSITIVE_FAMILIES
+    q, b, d = codes.shape
+    bb = min(block_b, max(32 if not interpret else 8, b))
+    bd = min(block_d, max(128 if not interpret else 8, d))
+    b_pad, d_pad = -b % bb, -d % bd
+
+    r = jnp.pad(codes, ((0, 0), (0, b_pad), (0, d_pad)))
+    s = jnp.pad(scale, ((0, 0), (0, b_pad)))
+    z = jnp.pad(zp, ((0, 0), (0, b_pad)), constant_values=1.0)
+    g = jnp.pad(grad, ((0, 0), (0, d_pad)))
+    mask = jnp.pad(jnp.ones((1, d), jnp.float32), ((0, 0), (0, d_pad)))
+    _, bp, dp = r.shape
+
+    out = pl.pallas_call(
+        _make_quant_batch_kernel(phi, positive),
+        grid=(q, bp // bb, dp // bd),
+        in_specs=[
+            pl.BlockSpec((1, bb, bd), lambda qi, i, j: (qi, i, j)),
+            pl.BlockSpec((1, bb), lambda qi, i, j: (qi, i)),
+            pl.BlockSpec((1, bb), lambda qi, i, j: (qi, i)),
+            pl.BlockSpec((1, bd), lambda qi, i, j: (qi, j)),
+            pl.BlockSpec((1, bd), lambda qi, i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bb, 1), lambda qi, i, j: (qi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, bp, 1), jnp.float32),
+        interpret=interpret,
+    )(r, s, z, g, mask)
     return out[:, :b, 0] + c_y[:, None]

@@ -73,3 +73,87 @@ def bregman_ub_matrix(
         interpret=interpret,
     )(a, sg, qs, sd)
     return out[:n, :q]
+
+
+def _make_quant_kernel(m_real: int):
+    def kernel(aq_ref, sgq_ref, as_ref, az_ref, gs_ref, gz_ref,
+               qsum_ref, sd_ref, sdsum_ref, out_ref):
+        aq = aq_ref[...].astype(jnp.float32)          # (bn, M) decoded codes
+        sgq = sgq_ref[...].astype(jnp.float32)
+        a_s, a_z = as_ref[...], az_ref[...]           # (bn, 1) row decode
+        g_s, g_z = gs_ref[...], gz_ref[...]
+        # Per-row affine factored out of both reductions: the HBM stream is
+        # int8 codes + four f32 scalars per row, not two (M,) f32 tables.
+        rowsum = a_s * jnp.sum(aq, axis=-1, keepdims=True) + m_real * a_z
+        cauchy = (g_s * jnp.dot(sgq, sd_ref[...],
+                                preferred_element_type=jnp.float32)
+                  + g_z * sdsum_ref[...])             # (bn, bq)
+        out_ref[...] = (rowsum + qsum_ref[...] + cauchy).astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_q", "interpret"))
+def bregman_ub_matrix_quant(
+    alpha_q: jax.Array,      # (n, M) int8 codes
+    alpha_scale: jax.Array,  # (n,)  per-row affine decode for alpha
+    alpha_zp: jax.Array,     # (n,)
+    sg_q: jax.Array,         # (n, M) int8 codes
+    sg_scale: jax.Array,     # (n,)
+    sg_zp: jax.Array,        # (n,)
+    qsum: jax.Array,         # (q,)  sum over subspaces of qconst
+    sqrt_delta: jax.Array,   # (q, M)
+    *,
+    block_n: int = 512,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """(n, q) UB totals from the int8 filter tables (kernels/ref.py oracle).
+
+    Same tiling as :func:`bregman_ub_matrix`; the per-row decode rides as
+    (bn, 1) scalar columns.  int8 VMEM tiles want a 32-row sublane, so the
+    row block floors at 32 (padded rows are stripped after).
+    """
+    n, m = alpha_q.shape
+    q = qsum.shape[0]
+    bn = min(block_n, max(32, n))
+    bq = min(block_q, max(1, q))
+    n_pad = -n % bn
+    q_pad = -q % bq
+    m_pad = -m % 128 if not interpret else 0
+
+    def pad_rows(a, fill=0):
+        return jnp.pad(a, ((0, n_pad),) + ((0, m_pad),) * (a.ndim - 1),
+                       constant_values=fill)
+
+    aq = pad_rows(alpha_q)
+    sgq = pad_rows(sg_q)
+    a_s = pad_rows(alpha_scale)[:, None]
+    a_z = pad_rows(alpha_zp)[:, None]
+    g_s = pad_rows(sg_scale)[:, None]
+    g_z = pad_rows(sg_zp)[:, None]
+    sd = jnp.pad(sqrt_delta, ((0, q_pad), (0, m_pad))).T      # (M, q)
+    qs = jnp.pad(qsum, (0, q_pad))[None, :]                   # (1, q)
+    sds = jnp.pad(jnp.sum(sqrt_delta, -1), (0, q_pad))[None, :]
+    np_, mp = aq.shape
+    qp = qs.shape[1]
+
+    out = pl.pallas_call(
+        _make_quant_kernel(m),
+        grid=(np_ // bn, qp // bq),
+        in_specs=[
+            pl.BlockSpec((bn, mp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, mp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bq), lambda i, j: (0, j)),
+            pl.BlockSpec((mp, bq), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bq), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, qp), jnp.float32),
+        interpret=interpret,
+    )(aq, sgq, a_s, a_z, g_s, g_z, qs, sd, sds)
+    return out[:n, :q]

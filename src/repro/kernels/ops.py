@@ -76,6 +76,25 @@ def bregman_ub_matrix(alpha, sqrt_gamma, qconst, sqrt_delta, impl=None):
                                  interpret=(mode == "interpret"))
 
 
+def bregman_ub_matrix_quant(alpha_q, alpha_scale, alpha_zp, sg_q, sg_scale,
+                            sg_zp, qconst, sqrt_delta, impl=None):
+    """(n, q) UB totals from the int8 filter tables (per-row affine decode)."""
+    if qconst.ndim != 2 or sqrt_delta.ndim != 2:
+        raise ValueError(
+            "bregman_ub_matrix_quant wants (q, M) query batches, got "
+            f"{qconst.shape}/{sqrt_delta.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_ub_matrix_quant(alpha_q, alpha_scale, alpha_zp,
+                                           sg_q, sg_scale, sg_zp,
+                                           qconst, sqrt_delta)
+    qsum = jnp.sum(qconst, axis=-1)
+    return _ub.bregman_ub_matrix_quant(alpha_q, alpha_scale, alpha_zp,
+                                       sg_q, sg_scale, sg_zp, qsum,
+                                       sqrt_delta,
+                                       interpret=(mode == "interpret"))
+
+
 def bregman_refine(rows, grad, c_y, family: str, impl=None):
     mode = _impl(impl)
     if mode == "ref":
@@ -95,6 +114,22 @@ def bregman_refine_batch(rows, grad, c_y, family: str, impl=None):
         return ref.bregman_refine_batch(rows, grad, c_y, family)
     return _dist.bregman_refine_batch(rows, grad, c_y, family,
                                       interpret=(mode == "interpret"))
+
+
+def bregman_refine_batch_quant(codes, scale, zp, grad, c_y, family: str,
+                               impl=None):
+    """Fused dequantize + exact distances.  (q,b,d) int8,(q,b),(q,b) -> (q,b)."""
+    if codes.ndim != 3 or scale.ndim != 2 or grad.ndim != 2:
+        raise ValueError(
+            "bregman_refine_batch_quant wants (q,b,d) codes with (q,b) "
+            f"decode rows, got {codes.shape}/{scale.shape}/{grad.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_refine_batch_quant(codes, scale, zp, grad, c_y,
+                                              family)
+    return _dist.bregman_refine_batch_quant(codes, scale, zp, grad, c_y,
+                                            family,
+                                            interpret=(mode == "interpret"))
 
 
 def pccp_correlation(x, impl=None):

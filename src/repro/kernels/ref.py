@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bregman import get_family
+from repro.core import quantize as qz
 
 Array = jax.Array
 
@@ -27,6 +28,40 @@ def bregman_ub_matrix(alpha: Array, sqrt_gamma: Array, qconst: Array,
     """UB totals for a query batch.  (n,M),(n,M),(q,M),(q,M) -> (n,q)."""
     return (jnp.sum(alpha, -1)[:, None] + jnp.sum(qconst, -1)[None, :]
             + sqrt_gamma @ sqrt_delta.T)
+
+
+def bregman_ub_matrix_quant(alpha_q: Array, alpha_scale: Array,
+                            alpha_zp: Array, sg_q: Array, sg_scale: Array,
+                            sg_zp: Array, qconst: Array,
+                            sqrt_delta: Array) -> Array:
+    """UB totals from the int8 filter tables.  Codes (n, M) int8, per-row
+    affine decode (n,), queries (q, M) -> (n, q).
+
+    The per-row affine factors out of both reductions, so only the int8
+    codes are streamed at full (n, M) width:
+
+        rowsum(alpha_hat)  = alpha_scale * rowsum(alpha_q) + M * alpha_zp
+        sg_hat . sd        = sg_scale * (sg_q . sd) + sg_zp * sum(sd)
+    """
+    m = alpha_q.shape[1]
+    arow = alpha_scale * jnp.sum(alpha_q.astype(jnp.float32), -1) + m * alpha_zp
+    qsum = jnp.sum(qconst, -1)                       # (q,)
+    sdsum = jnp.sum(sqrt_delta, -1)                  # (q,)
+    cauchy = (sg_scale[:, None] * (sg_q.astype(jnp.float32) @ sqrt_delta.T)
+              + sg_zp[:, None] * sdsum[None, :])
+    return arow[:, None] + qsum[None, :] + cauchy
+
+
+def bregman_refine_batch_quant(codes: Array, scale: Array, zp: Array,
+                               grad: Array, c_y: Array, family: str) -> Array:
+    """Fused dequantize + exact D_f over int8 candidate rows.
+
+    (q,b,d) int8 codes + (q,b) per-row scale/zp -> (q,b).  Decoding goes
+    through core/quantize.dequantize_rows itself, so the distances are
+    exact over the int8 tier's point set by construction.
+    """
+    rows = qz.dequantize_rows(codes, scale, zp, get_family(family))
+    return bregman_refine_batch(rows, grad, c_y, family)
 
 
 def bregman_refine(rows: Array, grad: Array, c_y: Array, family: str) -> Array:

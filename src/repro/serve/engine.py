@@ -20,12 +20,26 @@ Slot isolation: batched prefill touches every slot's cache region, so the
 engine re-merges old cache values for non-admitted slots (one select per
 leaf) — active sequences are never perturbed (tested).
 
-Logits hooks: ``logits_hook(logits (B, V), hidden (B, D))`` is invoked
-with the FULL slot batch, never per slot — once per decode tick, plus once
-more on ticks that admit new requests (the prefill sampling path).  Hooks
-that do retrieval (serve/knnlm.py) ride the fused batched kNN pipeline
+Logits hooks: ``logits_hook(logits (A, V), hidden (A, D))`` is invoked
+once per sampling step with the rows of the slots being sampled — every
+ACTIVE slot on a decode tick, every ADMITTED slot on the prefill sampling
+path — never per slot, and never with a dead slot's row: a free slot's
+cache holds garbage (e.g. ``last_idx = 0`` hidden states on admit ticks)
+and must not reach retrieval hooks.  Hooks that do retrieval
+(serve/knnlm.py) ride the fused batched kNN pipeline
 (core/search.knn_search_batch): one filter matmul, one prune, one refine
-for all B slots per invocation.  See docs/batched_serving.md.
+for all sampled slots per invocation.  The hook's batch axis varies with
+the live-slot count, so hook-side jitted programs compile once per
+distinct count — a warmup cost bounded by ``slots`` programs, accepted in
+exchange for never running retrieval on garbage rows.  See
+docs/batched_serving.md.
+
+Termination: a request finishes as soon as its output hits
+``max_new_tokens``, its sampled token equals ``cfg.eos_token``, or its
+cache fills — checked after EVERY sampled token, including the one the
+prefill path samples at admission.  ``max_new_tokens=1`` therefore emits
+exactly one token and never occupies a slot across a decode tick, and an
+EOS sampled from the prompt finishes the request immediately.
 """
 
 from __future__ import annotations
@@ -134,18 +148,27 @@ class Engine:
         # non-admitted slots keep their previous cache (slot isolation)
         self.caches = self._merge(new_caches, old_caches,
                                   jnp.asarray(admitted))
-        # sample each admitted slot at its true last-prompt position
-        last_idx = np.array(
-            [len(self.slot_req[s].prompt) - 1 if admitted[s] else 0
-             for s in range(b)])
-        last_hidden = hidden[jnp.arange(b), jnp.asarray(last_idx)]
+        # Sample ONLY the admitted slots, each at its true last-prompt
+        # position.  Non-admitted slots are dropped before the logits head
+        # and the hook: their hidden rows are whatever the batched prefill
+        # left at position 0 — garbage that must not trigger hook work
+        # (e.g. kNN retrieval) or sampling.
+        last_idx = np.array([len(r.prompt) - 1 for r in reqs])
+        last_hidden = hidden[jnp.asarray(np.array(slots)),
+                             jnp.asarray(last_idx)]
         logits = self.bundle.logits(self.params, last_hidden)
         first = self._sample(logits, last_hidden)
-        for s, r in zip(slots, reqs):
-            r.output.append(int(first[s]))
+        for j, (s, r) in enumerate(zip(slots, reqs)):
+            r.output.append(int(first[j]))
             self.lengths[s] = len(r.prompt)
+            # The prefill-sampled token counts against the budget and is
+            # checked against EOS like any decoded token; without this a
+            # max_new_tokens=1 request would decode a second token and an
+            # EOS-opening request would run to its full budget.
+            self._finish_if_done(s, at_admit=True)
 
     def _sample(self, logits: Array, hidden: Array | None = None) -> np.ndarray:
+        """Sample the given rows (already restricted to live slots)."""
         if self.logits_hook is not None:
             logits = self.logits_hook(logits, hidden)
         if self.cfg.greedy:
@@ -154,8 +177,33 @@ class Engine:
         return np.asarray(jax.random.categorical(
             k, logits / self.cfg.temperature, axis=-1))
 
+    def _finish_if_done(self, i: int, at_admit: bool = False) -> bool:
+        """Retire slot ``i`` if its newest token terminates the request.
+
+        THE termination check — budget, EOS, and cache capacity — shared
+        by the decode tick and the prefill sampling path, so every sampled
+        token (including the admission-sampled first token) is judged by
+        the same rule.  Capacity keeps the decode path's one-slot margin
+        (``lengths + 1 >= max_seq``, pre-existing); at admission the
+        margin is zero — a prompt of length ``max_seq - 1`` still has room
+        for its one decode write, and retiring it here would drop a token
+        the decode path would have produced.
+        """
+        r = self.slot_req[i]
+        hit_eos = r.output[-1] == self.cfg.eos_token
+        margin = 0 if at_admit else 1
+        full = (len(r.output) >= r.max_new_tokens
+                or self.lengths[i] + margin >= self.cfg.max_seq)
+        if hit_eos or full:
+            r.done = True
+            self.finished.append(r)
+            self.slot_req[i] = None
+            self.lengths[i] = 0
+            return True
+        return False
+
     def step(self) -> bool:
-        """One engine tick: admit, then one decode step for all slots."""
+        """One engine tick: admit, then one decode step for active slots."""
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -168,20 +216,15 @@ class Engine:
         logits, hidden, self.caches = self._decode(
             self.params, jnp.asarray(last), self._positions(pos),
             self.caches, jnp.asarray(self.lengths))
-        nxt = self._sample(logits, hidden)
-        for i in active:
-            r = self.slot_req[i]
-            tok = int(nxt[i])
-            r.output.append(tok)
+        # Free slots decode garbage rows (the batch is slot-shaped); drop
+        # them before sampling so hooks only ever see live sequences.
+        rows = jnp.asarray(np.array(active))
+        nxt = self._sample(logits[rows],
+                           None if hidden is None else hidden[rows])
+        for j, i in enumerate(active):
+            self.slot_req[i].output.append(int(nxt[j]))
             self.lengths[i] += 1
-            hit_eos = tok == self.cfg.eos_token
-            full = (len(r.output) >= r.max_new_tokens
-                    or self.lengths[i] + 1 >= self.cfg.max_seq)
-            if hit_eos or full:
-                r.done = True
-                self.finished.append(r)
-                self.slot_req[i] = None
-                self.lengths[i] = 0
+            self._finish_if_done(i)
         return True
 
     def run(self, max_ticks: int = 1000):

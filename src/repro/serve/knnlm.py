@@ -59,6 +59,11 @@ class Datastore:
     # False and call index.compact() from a maintenance tick instead.
     auto_compact: bool = True
 
+    @property
+    def storage(self) -> str:
+        """Key-table storage tier ("f32" | "int8" — see build_datastore)."""
+        return self.index.storage
+
     def _mutable(self) -> SegmentedForest:
         if not isinstance(self.index, SegmentedForest):
             self.index = SegmentedForest.from_forest(self.index)
@@ -100,10 +105,18 @@ class Datastore:
 
 def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
                     family: str = "squared_euclidean",
-                    m: int | None = None, seed: int = 0) -> Datastore:
+                    m: int | None = None, quantize: bool = False,
+                    seed: int = 0) -> Datastore:
     """Teacher-forced pass over (num_seqs, seq_len) tokens -> datastore.
 
     Keys: hidden state at position t; values: token at t+1.
+
+    ``quantize=True`` stores the keys in the int8 BallForest tier —
+    ~4x smaller key table for large value stores, with retrieval still
+    exact over the stored (decoded) keys; grows quantize their keys the
+    same way (docs/quantization.md).  d_model-sized hidden states are
+    exactly the "hundreds of dimensions, millions of keys" regime the
+    memory win targets.
     """
     num, s = corpus_tokens.shape
     pos = np.arange(s, dtype=np.int32)[None, :].repeat(num, 0)
@@ -117,7 +130,7 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
     keys = np.asarray(hidden[:, :-1].reshape(-1, hidden.shape[-1]),
                       np.float32)
     vals = np.asarray(corpus_tokens[:, 1:].reshape(-1), np.int32)
-    index = build_index(keys, family, m=m, seed=seed)
+    index = build_index(keys, family, m=m, quantize=quantize, seed=seed)
     return Datastore(index=index, next_tokens=vals,
                      hidden_dim=keys.shape[-1])
 
@@ -126,7 +139,9 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
 class KNNLMHook:
     """``logits_hook`` for serve.engine.Engine: Bregman-kNN interpolation.
 
-    The engine passes (logits (B, V), hidden (B, D)); the hook retrieves
+    The engine passes the sampled slots' rows (logits (A, V), hidden
+    (A, D) — active slots on decode ticks, admitted slots on the prefill
+    path, never a dead slot's garbage row); the hook retrieves
     each row's k nearest datastore keys with BrePartition and mixes the
     neighbor next-token distribution into the LM distribution.
     """
@@ -154,12 +169,15 @@ class KNNLMHook:
         if live < self.k:
             return logits
         h = jnp.asarray(hidden, jnp.float32)
-        # The engine hands the full (slots, D) hidden batch at every
-        # sampling step (each decode tick, plus once when admissions
-        # prefill), so each step is ONE fused knn_search_batch program: one
-        # filter matmul, one prune, one refine for all slots.  Pinning the
-        # budget keeps the jit cache to a single program per (slots, k);
-        # rare union overflows fall back to the capped sized retry.
+        # The engine hands the LIVE rows (A, D) at every sampling step —
+        # active slots on decode ticks, admitted slots on the prefill
+        # path; dead slots' garbage rows never reach retrieval — so each
+        # step is ONE fused knn_search_batch program: one filter matmul,
+        # one prune, one refine for all sampled slots.  Pinning the budget
+        # keeps the refine shape stable; the batch axis still varies with
+        # the live-slot count (bounded by the engine's slot pool, so the
+        # jit cache holds at most `slots` programs per k).  Rare union
+        # overflows fall back to the capped sized retry.
         res = bp_search.knn_batch(self.store.index, h, self.k,
                                   budget=self.budget,
                                   approx_p=self.approx_p)

@@ -9,11 +9,16 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
-from repro.kernels.bregman_ub import bregman_ub_matrix
+from repro.kernels.bregman_ub import bregman_ub_matrix, bregman_ub_matrix_quant
 from repro.kernels.bregman_dist import bregman_refine
 from repro.kernels.pccp_corr import pccp_correlation
 from repro.kernels.flash_attention import flash_attention
+from repro.core import quantize as qz
 from repro.core.bregman import get_family
+
+# NOTE: the DETERMINISTIC parity tests for the quantized kernels live in
+# tests/test_quantized.py, outside this module's hypothesis gate, so they
+# run wherever jax runs; only the property sweep below needs hypothesis.
 
 
 # ---------------------------------------------------------------------------
@@ -46,6 +51,24 @@ def test_ub_kernel_property(n, m, q, seed):
     sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
     got = bregman_ub_matrix(alpha, sg, jnp.sum(qc, -1), sd, interpret=True)
     want = ref.bregman_ub_matrix(alpha, sg, qc, sd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_ub_quant_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    a_q, a_s, a_z = qz.quantize_stats(
+        jnp.asarray(rng.normal(size=(n, m)), jnp.float32))
+    g_q, g_s, g_z = qz.quantize_stats(
+        jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32))
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    got = bregman_ub_matrix_quant(a_q, a_s, a_z, g_q, g_s, g_z,
+                                  jnp.sum(qc, -1), sd, interpret=True)
+    want = ref.bregman_ub_matrix_quant(a_q, a_s, a_z, g_q, g_s, g_z, qc, sd)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
 
