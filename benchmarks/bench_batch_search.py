@@ -5,7 +5,16 @@ BENCH json tracks batch throughput over time.  The baseline is the honest
 pre-fusion batch path — ``jax.vmap`` of the single-query jit core at the
 same static budget — which pays per-query cluster-pruning gathers and a
 full-n budget top_k per query; the fused pipeline replaces those with one
-broadcasted compare and a cumsum compaction (core/search.py docstring).
+broadcasted compare and a streaming scatter compaction.
+
+Two streaming-specific columns ride every fused row (and the BENCH
+trajectory): ``skip_rate`` — the fraction of (block, query) tiles pruned
+by the corner-envelope gate before their per-point admit work — and
+``peak_bytes`` — the compiled program's temp-buffer high-water mark
+(XLA ``memory_analysis``, -1 where the backend hides it), next to
+``mask_bytes``, the ~5 n*q bytes the retired mask/cumsum pipeline held at
+the same shape.  A large-n clustered shape exercises exactly the regime
+that used to thrash on the (n, q) mask and now skips whole blocks.
 """
 
 from __future__ import annotations
@@ -28,6 +37,43 @@ BATCH_SIZES = (1, 8, 64, 256)
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
 def _vmapped_baseline(index, ys, k, budget):
     return jax.vmap(lambda y: search.knn_search(index, y, k, budget))(ys)
+
+
+def _peak_temp_bytes(index, ys, k, budget, block_rows):
+    """Temp high-water mark of the compiled fused program (-1 if hidden)."""
+    try:
+        compiled = search._knn_search_batch_jit.lower(
+            index, ys, k, budget,
+            search.resolve_block_rows(block_rows, index.n)).compile()
+        return int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backend-dependent introspection
+        return -1
+
+
+def _stream_cols(index, ys, k, budget, block_rows=None):
+    """Streaming telemetry columns for one fused shape.
+
+    ``skip_rate``: measured fraction of (block, query) tiles the envelope
+    gate rejected (each provably contributes no candidate); a block's
+    per-point kernel still runs if any OTHER query admits it, so the
+    compute actually avoided is ``block_skip_rate`` (whole blocks every
+    query rejected).  ``peak_bytes``: the compiled program's total temp
+    high-water mark (includes the refine gather both pipelines share).
+    ``pair_bytes`` vs ``mask_bytes``: the per-point-query-pair
+    intermediates of the prune+compact phase alone — what streaming
+    removed — O(block_rows * q) streamed vs the retired ~5-byte (n, q)
+    mask + (q, n) cumsum.
+    """
+    _, stats = search.knn_search_batch_stats(index, ys, k, budget,
+                                             block_rows=block_rows)
+    n, q = index.n, ys.shape[0]
+    return {
+        "skip_rate": round(stats["block_skip_rate"], 3),
+        "block_skip_rate": round(stats["whole_block_skip_rate"], 3),
+        "peak_bytes": _peak_temp_bytes(index, ys, k, budget, block_rows),
+        "pair_bytes": 8 * stats["block_rows"] * q,
+        "mask_bytes": 5 * n * q,      # the retired (n,q)+(q,n) intermediates
+    }
 
 
 def run(scale: float = 1.0):
@@ -53,7 +99,56 @@ def run(scale: float = 1.0):
                         {"n": n, "qps": round(qps_base, 1)}))
         rows.append(Row("batch_search", f"fused_q{q}", us_fused,
                         {"n": n, "qps": round(qps_fused, 1),
-                         "speedup": round(us_base / us_fused, 2)}))
+                         "speedup": round(us_base / us_fused, 2),
+                         **_stream_cols(index, ys, k, budget)}))
+
+    # Large-n clustered shape: the regime that used to hold ~5 n*q bytes of
+    # mask/cumsum (OOM/thrash territory as n*q grows) and where spatial
+    # locality lets the envelope gate skip whole blocks.  The baseline here
+    # is the kept mask/cumsum reference pipeline at the same shape, so the
+    # json tracks streamed-vs-materialized directly.  Well-separated blobs
+    # + blocks of ~1/32 of the table mean most blocks are blob-pure and
+    # queries sitting on one blob let the gate drop the rest.
+    n_l = max(4096, int(131072 * scale))
+    q_l = 64
+    rng = np.random.default_rng(2)
+    # Blobs shifted on EVERY dim: the paper's P-tuple bound prunes by
+    # per-subspace stats, so separation must be visible in each subspace
+    # (an all-dims shift survives any partition) for Theorem 3 — and hence
+    # the envelope gate — to drop other blobs' blocks wholesale.  128
+    # small blobs keep each query's union (~ its own blob) serving-sized,
+    # so the refine gather does not drown the prune-phase comparison.
+    blob = rng.integers(0, 128, size=n_l)
+    data_l = (rng.normal(size=(n_l, d)).astype(np.float32)
+              + (6.0 * blob).astype(np.float32)[:, None])
+    index_l = build_index(data_l, "squared_euclidean", m=m,
+                          num_clusters=min(256, n_l // 16), seed=0)
+    ys_l = jnp.asarray(data_l[np.where(blob == 0)[0][:q_l]] + 0.01)
+    q_l = int(ys_l.shape[0])     # blob 0 may hold < 64 rows at small scales
+    # A union is ~ the query's blob; cover it so both pipelines run exact
+    # at identical static shapes, and scan in blob-fraction-sized blocks.
+    budget_l = search.fitted_budget(index_l, k, n_l // 64)
+    # Blob-fraction-sized blocks at full scale; floored at 2048 because on
+    # the CPU ref backend each scan step has a fixed dispatch cost that
+    # dwarfs sub-2k blocks (on TPU the floor is the VMEM tile, not this).
+    br_l = max(2048, n_l // 32)
+    us_ref = timeit(lambda: search.knn_search_batch_reference(
+        index_l, ys_l, k, budget_l, block_rows=br_l), repeats=3)
+    us_str = timeit(lambda: search.knn_search_batch(
+        index_l, ys_l, k, budget_l, block_rows=br_l), repeats=3)
+    try:
+        ref_peak = int(search._knn_search_batch_ref_jit.lower(
+            index_l, ys_l, k, budget_l,
+            br_l).compile().memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backend-dependent introspection
+        ref_peak = -1
+    rows.append(Row("batch_search", f"large_n_masked_q{q_l}", us_ref,
+                    {"n": n_l, "qps": round(q_l / (us_ref / 1e6), 1),
+                     "peak_bytes": ref_peak}))
+    rows.append(Row("batch_search", f"large_n_streamed_q{q_l}", us_str,
+                    {"n": n_l, "qps": round(q_l / (us_str / 1e6), 1),
+                     "speedup": round(us_ref / us_str, 2),
+                     **_stream_cols(index_l, ys_l, k, budget_l, br_l)}))
     return rows
 
 

@@ -70,6 +70,17 @@ class BallForest:
     sqrt_gamma_max_pt: Array  # (n, M)  own-cluster corner sqrt_gamma_max per point
     gamma_edges: Array    # (M, nb-1) gamma-bucket quantile edges (for appends)
     storage: str = "f32"      # "f32" | "int8" — static (jit cache key)
+    # Per-block corner envelopes over ENV_BLOCK_ROWS-row groups of the
+    # layout: row e holds the tightest alpha_min / loosest sqrt_gamma_max of
+    # rows [e*ENV_BLOCK_ROWS, (e+1)*ENV_BLOCK_ROWS) — always fp32 (in the
+    # int8 tier they are reduced over the DECODED directed-rounded corners,
+    # so they dominate exactly what the per-point test decodes).  The
+    # streaming batched prune tests a whole block against these before
+    # touching its per-point tile and skips blocks no query admits
+    # (core/search._stream_prune_compact).  Tiny (n / ENV_BLOCK_ROWS rows),
+    # replicated on every shard.
+    env_alpha_min: Array | None = None        # (nE, M) fp32
+    env_sqrt_gamma_max: Array | None = None   # (nE, M) fp32
     data_scale: Array | None = None   # (n,) data row affine scale (int8 tier)
     data_zp: Array | None = None      # (n,) data row affine zero-point
     alpha_scale: Array | None = None  # (n,) filter-stat decode, round-nearest
@@ -114,6 +125,7 @@ class BallForest:
                self.assign, self.alpha_min, self.sqrt_gamma_max, self.counts,
                self.centers, self.beta_samples, self.alpha_min_pt,
                self.sqrt_gamma_max_pt, self.gamma_edges,
+               self.env_alpha_min, self.env_sqrt_gamma_max,
                self.data_scale, self.data_zp, self.alpha_scale, self.alpha_zp,
                self.sg_scale, self.sg_zp, self.amin_scale, self.amin_zp,
                self.gmax_scale, self.gmax_zp)
@@ -125,11 +137,12 @@ class BallForest:
     def tree_unflatten(cls, static, dyn):
         return cls(static[0], static[1], static[2], *dyn[:13],
                    storage=static[3],
-                   data_scale=dyn[13], data_zp=dyn[14],
-                   alpha_scale=dyn[15], alpha_zp=dyn[16],
-                   sg_scale=dyn[17], sg_zp=dyn[18],
-                   amin_scale=dyn[19], amin_zp=dyn[20],
-                   gmax_scale=dyn[21], gmax_zp=dyn[22])
+                   env_alpha_min=dyn[13], env_sqrt_gamma_max=dyn[14],
+                   data_scale=dyn[15], data_zp=dyn[16],
+                   alpha_scale=dyn[17], alpha_zp=dyn[18],
+                   sg_scale=dyn[19], sg_zp=dyn[20],
+                   amin_scale=dyn[21], amin_zp=dyn[22],
+                   gmax_scale=dyn[23], gmax_zp=dyn[24])
 
 
 jax.tree_util.register_pytree_node(
@@ -137,18 +150,29 @@ jax.tree_util.register_pytree_node(
 )
 
 
+# Row-group size of the precomputed corner envelopes: one envelope row
+# summarizes this many layout rows.  A streaming-scan block of B rows
+# covers at most ceil(B / ENV_BLOCK_ROWS) + 1 envelope rows at any
+# alignment, which is how the per-block skip test stays cheap for every
+# ``block_rows`` setting (core/search.py).
+ENV_BLOCK_ROWS = 256
+
 # Point-major (n, ...) fields — the arrays a data-parallel shard slices.
-# Everything else (per-cluster corners, centers, beta samples) is small and
-# replicated on every shard.  The int8 storage tier adds the per-row decode
-# fields; every consumer that walks point-major arrays must go through
-# point_fields(forest), not the bare f32 tuple.
+# Everything else (per-cluster corners, centers, beta samples, block
+# envelopes) is small and replicated on every shard.  The int8 storage tier
+# adds the per-row decode fields; every consumer that walks point-major
+# arrays must go through point_fields(forest), not the bare f32 tuple.
+# The envelope tables are NOT point-major (their leading axis counts
+# ENV_BLOCK_ROWS-row groups, not rows), so pad/slice/concat/tombstone
+# maintain them explicitly rather than through the point_fields walk.
 POINT_FIELDS = ("data", "point_ids", "alpha", "sqrt_gamma", "assign",
                 "alpha_min_pt", "sqrt_gamma_max_pt")
+ENV_FIELDS = ("env_alpha_min", "env_sqrt_gamma_max")
 QUANT_FIELDS = ("data_scale", "data_zp", "alpha_scale", "alpha_zp",
                 "sg_scale", "sg_zp", "amin_scale", "amin_zp",
                 "gmax_scale", "gmax_zp")
 REPLICATED_FIELDS = ("alpha_min", "sqrt_gamma_max", "counts", "centers",
-                     "beta_samples", "gamma_edges")
+                     "beta_samples", "gamma_edges") + ENV_FIELDS
 
 
 def point_fields(index_or_storage) -> tuple:
@@ -193,6 +217,58 @@ def inert_fill(index_or_storage) -> dict:
     return INERT_FILL_INT8 if storage == "int8" else INERT_FILL
 
 
+def corner_envelopes(amin_pt: Array, gmax_pt: Array) -> tuple[Array, Array]:
+    """Block envelopes of (n, M) fp32 corner tables -> ((nE, M), (nE, M)).
+
+    Row e is the componentwise min/max over layout rows
+    ``[e*ENV_BLOCK_ROWS, (e+1)*ENV_BLOCK_ROWS)``; a short tail group is
+    completed with the inert corner (``alpha_min`` PAD_CORNER,
+    ``sqrt_gamma_max`` 0), which contributes nothing to either reduction —
+    the same reason padded/tombstoned rows never loosen an envelope.
+    """
+    n, m = amin_pt.shape
+    ne = max(-(-n // ENV_BLOCK_ROWS), 1)
+    pad = ne * ENV_BLOCK_ROWS - n
+    a = jnp.pad(amin_pt, ((0, pad), (0, 0)), constant_values=PAD_CORNER)
+    g = jnp.pad(gmax_pt, ((0, pad), (0, 0)), constant_values=0.0)
+    return (jnp.min(a.reshape(ne, ENV_BLOCK_ROWS, m), axis=1),
+            jnp.max(g.reshape(ne, ENV_BLOCK_ROWS, m), axis=1))
+
+
+def refresh_envelopes(forest: BallForest) -> BallForest:
+    """Recompute the block-envelope tables from the per-point corners.
+
+    In the int8 tier the reduction runs over the DECODED (directed-rounded,
+    conservative) corners, so the envelope of a block always dominates the
+    values the per-point Theorem-3 test will decode for its rows — the
+    invariant that makes envelope-level block skipping loss-free.
+    """
+    amin, gmax = qz.decoded_corner_tables(forest)
+    ea, eg = corner_envelopes(amin, gmax)
+    return dataclasses.replace(forest, env_alpha_min=ea,
+                               env_sqrt_gamma_max=eg)
+
+
+def _pad_envelopes(forest: BallForest, padded_n: int) -> dict:
+    """ENV_FIELDS updates covering ``padded_n`` rows with inert tail rows."""
+    if forest.env_alpha_min is None:
+        return {}
+    ne_new = max(-(-padded_n // ENV_BLOCK_ROWS), 1)
+    grow = ne_new - forest.env_alpha_min.shape[0]
+    if grow <= 0:
+        return {}
+    m = forest.env_alpha_min.shape[1]
+    # The boundary group's existing envelope stays valid: the appended rows
+    # are inert (PAD_CORNER corners) and move neither reduction.
+    return {
+        "env_alpha_min": jnp.concatenate(
+            [forest.env_alpha_min,
+             jnp.full((grow, m), PAD_CORNER, jnp.float32)]),
+        "env_sqrt_gamma_max": jnp.concatenate(
+            [forest.env_sqrt_gamma_max, jnp.zeros((grow, m), jnp.float32)]),
+    }
+
+
 def pad_points(forest: BallForest, multiple: int) -> BallForest:
     """Pad the point-major arrays with inert rows so ``n % multiple == 0``."""
     pad = (-forest.n) % multiple
@@ -206,7 +282,8 @@ def pad_points(forest: BallForest, multiple: int) -> BallForest:
 
     return dataclasses.replace(forest, **{
         f: pad_rows(getattr(forest, f), fill[f])
-        for f in point_fields(forest)})
+        for f in point_fields(forest)},
+        **_pad_envelopes(forest, forest.n + pad))
 
 
 def tombstone_rows(forest: BallForest, dead: Array) -> BallForest:
@@ -217,6 +294,11 @@ def tombstone_rows(forest: BallForest, dead: Array) -> BallForest:
     put it beyond any finite top-k and its corner stats fail every
     Theorem-3 admission, so the filter, prune, and refine phases of all
     three search paths skip it without knowing deletions exist.
+
+    The block-envelope tables are left untouched: removing a row can only
+    TIGHTEN a block's true envelope, so the stored one stays a valid
+    (merely looser) dominator and block skipping stays loss-free.
+    Compaction recomputes them exactly.
     """
     dead = jnp.asarray(dead, bool)
     fill = inert_fill(forest)
@@ -247,9 +329,16 @@ def concat_points(forests) -> BallForest:
             raise ValueError("concat_points needs segments of one index")
     if len(forests) == 1:
         return head
-    return dataclasses.replace(head, **{
+    out = dataclasses.replace(head, **{
         f: jnp.concatenate([getattr(seg, f) for seg in forests], axis=0)
         for f in point_fields(head)})
+    # Segment boundaries rarely align with ENV_BLOCK_ROWS, so the result's
+    # envelope groups straddle segments; recompute from the concatenated
+    # per-point corners instead of stitching per-segment tables (O(n * M),
+    # paid once per snapshot — view() caches the result).
+    if head.env_alpha_min is not None:
+        out = refresh_envelopes(out)
+    return out
 
 
 def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
@@ -257,12 +346,18 @@ def slice_points(forest: BallForest, start: int, size: int) -> BallForest:
 
     This is the host-side mirror of what one device sees under the
     ``shard_map`` in dist/knn.py: point-major arrays sliced, per-cluster /
-    sample arrays shared.
+    sample arrays shared.  (The real sharded path keeps the GLOBAL envelope
+    tables replicated and indexes them by shard offset; this standalone
+    view re-derives envelopes for its own row range so it is a complete
+    self-consistent index.)
     """
-    return dataclasses.replace(forest, **{
+    out = dataclasses.replace(forest, **{
         f: jax.lax.slice_in_dim(getattr(forest, f), start, start + size,
                                 axis=0)
         for f in point_fields(forest)})
+    if forest.env_alpha_min is not None:
+        out = refresh_envelopes(out)
+    return out
 
 
 def default_num_clusters(n: int) -> int:
@@ -283,12 +378,17 @@ def quantize_point_tables(forest: BallForest, data_codes: Array,
     """
     if forest.storage != "f32":
         raise ValueError("quantize_point_tables wants an f32 forest")
-    return dataclasses.replace(
+    out = dataclasses.replace(
         forest, storage="int8",
         data=data_codes, data_scale=data_scale, data_zp=data_zp,
         **qz.encode_stat_tables(forest.alpha, forest.sqrt_gamma,
                                 forest.alpha_min_pt,
                                 forest.sqrt_gamma_max_pt))
+    # The corner re-encode just moved every per-point corner by up to one
+    # directed-rounding step, so any envelopes carried in from the fp32
+    # forest no longer dominate the DECODED corners — refit them here so
+    # the invariant holds for every caller, not just build_index.
+    return refresh_envelopes(out)
 
 
 def build_index(
@@ -438,4 +538,7 @@ def build_index(
     if quantize:
         forest = quantize_point_tables(
             forest, data_codes[order], data_scale[order], data_zp[order])
-    return forest
+    # Envelopes come LAST so the int8 tier reduces over the decoded
+    # directed-rounded corners it will serve, not the pre-encode fp32 ones
+    # (whose floor-rounding could otherwise dip below the envelope).
+    return refresh_envelopes(forest)

@@ -142,6 +142,24 @@ def dequantize_stats(codes: Array, scale: Array, zp: Array) -> Array:
     return codes.astype(jnp.float32) * scale[..., None] + zp[..., None]
 
 
+def decoded_corner_tables(forest) -> tuple[Array, Array]:
+    """Full (n, M) fp32 corner tables of an index (decoded in the int8 tier).
+
+    The int8 corners were DIRECTED-rounded at encode (alpha_min floored,
+    sqrt_gamma_max ceiled), so the values returned here are conservative
+    and every consumer — the per-point Theorem-3 test, and the block
+    envelopes reduced over these exact values (core/index.corner_envelopes)
+    — needs no further slack.  Duck-typed over anything with the
+    BallForest corner fields so core/index.py and core/search.py share one
+    decode.
+    """
+    amin, gmax = forest.alpha_min_pt, forest.sqrt_gamma_max_pt
+    if forest.storage == "int8":
+        amin = dequantize_stats(amin, forest.amin_scale, forest.amin_zp)
+        gmax = dequantize_stats(gmax, forest.gmax_scale, forest.gmax_zp)
+    return amin, gmax
+
+
 def ub_slack(alpha_scale: Array, sg_scale: Array, sqrt_delta: Array) -> Array:
     """Alg.-4 bound inflation from filter-stat scales — THE slack formula.
 

@@ -26,21 +26,30 @@ serving fast path:
     the per-column k smallest UBs are extracted by a *streaming* tiled
     k-selection: a ``lax.scan`` over ``block_rows``-sized row blocks merges
     each block's (bn, q) UB tile into a running (q, k) best set, so the
-    (n, q) f32 UB matrix never materializes.  (The prune/compact phases
-    below still hold a (n, q) bool mask and a (q, n) int32 cumsum — ~5
-    bytes per point-query pair; folding those into the same scan is the
-    remaining step to a fully O(block_rows * q) pipeline.)
-  * **Prune** — Theorem-3 cluster pruning uses the index's precomputed
-    per-point corner stats (``alpha_min_pt``/``sqrt_gamma_max_pt``,
-    core/index.py), turning the batched mask into one broadcasted
-    elementwise compare over (n-block, M, q) — zero query-time gathers,
-    versus the (q, n, M) gather storm the vmapped path pays.
-  * **Select** — candidates are compacted into the static budget by binary
-    search on the running member count (O(n) cumsum + O(budget log n)
-    searches per query) instead of a full-n ``top_k`` per
-    query.  Slot order is index order, not UB order; when the union
-    overflows the budget the overflowing queries are flagged ``exact=False``
-    and the host wrapper retries, exactly like the single-query path.
+    (n, q) f32 UB matrix never materializes.
+  * **Prune + compact** — a second scan over the SAME row blocks
+    (:func:`_stream_prune_compact`) runs the whole post-filter pipeline
+    in one streaming pass.  Each block is first tested at BLOCK
+    granularity against the index's precomputed corner envelopes
+    (``env_alpha_min``/``env_sqrt_gamma_max``, core/index.py — the
+    tightest alpha_min / loosest sqrt_gamma_max over each
+    ENV_BLOCK_ROWS-row group): an envelope dominates every row it covers,
+    so a block no query admits is SKIPPED outright (``lax.cond``) without
+    touching its per-point tile.  Surviving blocks run the fused
+    Theorem-3 per-point admit kernel (kernels/ops.bregman_prune_block —
+    corner recompute, compare, and mask emit in one VMEM-resident pass),
+    take a per-block per-query prefix count, and scatter admitted rows
+    straight into their static (q, budget) candidate slots via the
+    running member count carried across blocks.  The historical (n, q)
+    bool mask, (q, n) int32 cumsum, and per-query binary searches are
+    gone: peak intermediate memory is O(block_rows * q + q * budget),
+    independent of n (guarded by the hlo-analysis regression test in
+    tests/test_stream_memory.py).  Slot order is index order, not UB
+    order; when the union overflows the budget the overflowing queries
+    are flagged ``exact=False`` and the host wrapper retries, exactly
+    like the single-query path.  (:func:`knn_search_batch_reference`
+    keeps the materialized mask/cumsum implementation as the bit-parity
+    oracle for tests and benchmarks.)
 
 Refinement then runs ONE batched kernel call over all queries' candidate
 rows (kernels/bregman_dist.bregman_refine_batch) with per-query grad/c_y
@@ -73,7 +82,7 @@ import jax
 import jax.numpy as jnp
 
 from .bregman import get_family
-from .index import BallForest
+from .index import BallForest, ENV_BLOCK_ROWS
 from .transform import q_transform
 from . import bounds
 from . import quantize as qz
@@ -85,10 +94,36 @@ POS_BIG = 1e30
 
 logger = logging.getLogger(__name__)
 
-# Row-block size for the streaming batched filter; one block is the unit of
-# VMEM residency (the TPU analogue of the paper's disk page, sized so the
-# (block, q) UB tile plus the (block, M, q) prune tile stay on-chip).
+# Default row-block size for the streaming batched pipeline; one block is
+# the unit of VMEM residency (the TPU analogue of the paper's disk page,
+# sized so the (block, q) UB tile plus the (block, q) admit tile stay
+# on-chip).  Tunable end to end via the ``block_rows`` argument — see
+# :func:`resolve_block_rows` for the tradeoff.
 DEFAULT_BLOCK_ROWS = 4096
+
+
+def resolve_block_rows(block_rows: int | None, n: int) -> int:
+    """Validate the ``block_rows`` tuning knob against an index of n rows.
+
+    ``None`` means :data:`DEFAULT_BLOCK_ROWS`.  The value bounds BOTH
+    streaming scans' working sets (filter merge and prune+compact), so it
+    trades peak memory/VMEM residency against scan overhead: smaller
+    blocks -> lower peak intermediate bytes (O(block_rows * q)) and
+    finer-grained envelope skipping, larger blocks -> fewer scan steps and
+    better MXU utilization per step.  Values beyond ``n`` are legal (the
+    layout clamps to one block); non-positive or non-integer values are
+    programming errors and raise.
+    """
+    if block_rows is None:
+        return DEFAULT_BLOCK_ROWS
+    if isinstance(block_rows, bool) or not isinstance(block_rows, int):
+        raise ValueError(f"block_rows must be an int, got {block_rows!r}")
+    if block_rows < 8:
+        raise ValueError(
+            f"block_rows={block_rows} is below the minimum tile of 8 rows")
+    if n < 1:
+        raise ValueError(f"cannot search an empty index (n={n})")
+    return block_rows
 
 
 class SearchResult(NamedTuple):
@@ -178,11 +213,7 @@ def _corner_tables(index: BallForest) -> tuple[Array, Array]:
     sqrt_gamma_max ceiled), so the decoded values are conservative and the
     Theorem-3 admission below needs no slack term.
     """
-    amin, gmax = index.alpha_min_pt, index.sqrt_gamma_max_pt
-    if index.storage == "int8":
-        amin = qz.dequantize_stats(amin, index.amin_scale, index.amin_zp)
-        gmax = qz.dequantize_stats(gmax, index.gmax_scale, index.gmax_zp)
-    return amin, gmax
+    return qz.decoded_corner_tables(index)
 
 
 def _corner_admit(amin_pt: Array, gmax_pt: Array, qconst: Array,
@@ -429,17 +460,9 @@ def _candidate_mask_batch(index: BallForest, qs: dict, qb: Array,
     qc = qs["qconst"].T[None, :, :]                     # (1, M, q)
     sd = qs["sqrt_delta"].T[None, :, :]                 # (1, M, q)
     qbT = qb.T[None, :, :]                              # (1, M, q)
+    blocks = _corner_blocks(index, bn, nb)
 
     if index.storage == "int8":
-        # Stream the corner CODES (1 byte/entry) and decode per block; the
-        # PAD_CORNER sentinel rides in the padded rows' zero-point.
-        blocks = (_pad_blocks(index.alpha_min_pt, bn, nb),
-                  _pad_blocks(index.sqrt_gamma_max_pt, bn, nb),
-                  _pad_cols(index.amin_scale, bn, nb),
-                  _pad_cols(index.amin_zp, bn, nb, fill=POS_BIG),
-                  _pad_cols(index.gmax_scale, bn, nb),
-                  _pad_cols(index.gmax_zp, bn, nb))
-
         def block_mask(blk):
             am_q, gm_q, a_s, a_z, g_s, g_z = blk
             amin = qz.dequantize_stats(am_q, a_s, a_z)  # (bn, M)
@@ -447,12 +470,6 @@ def _candidate_mask_batch(index: BallForest, qs: dict, qb: Array,
             return _corner_admit(amin[:, :, None], gmax[:, :, None],
                                  qc, sd, qbT, sub_axis=1)   # (bn, q)
     else:
-        # Padded rows are sliced off below ([:n]); the +inf corner fill is
-        # belt-and-braces only (unlike _batch_filter_topk's padding, which
-        # is load-bearing via the gidx < n mask).
-        blocks = (_pad_blocks(index.alpha_min_pt, bn, nb, fill=POS_BIG),
-                  _pad_blocks(index.sqrt_gamma_max_pt, bn, nb))
-
         def block_mask(blk):
             amin, gmax = blk                            # (bn, M)
             return _corner_admit(amin[:, :, None], gmax[:, :, None],
@@ -460,6 +477,28 @@ def _candidate_mask_batch(index: BallForest, qs: dict, qb: Array,
 
     mask = jax.lax.map(block_mask, blocks)              # (nb, bn, q)
     return mask.reshape(nb * bn, q)[:n]
+
+
+def _corner_blocks(index: BallForest, bn: int, nb: int) -> tuple:
+    """The (nb, bn, ...) corner-table blocks both prune implementations scan.
+
+    THE one definition of the inert-row padding for the prune phase: the
+    f32 tier pads ``alpha_min_pt`` with +BIG directly, the int8 tier
+    streams the corner CODES (1 byte/entry) with the PAD_CORNER sentinel
+    riding in the padded rows' zero-point (zero scale, so a padded row
+    decodes to +BIG and fails every admission).  Shared by the streamed
+    scan and the materialized reference so the two pipelines can never
+    disagree on what a padded row decodes to.
+    """
+    if index.storage == "int8":
+        return (_pad_blocks(index.alpha_min_pt, bn, nb),
+                _pad_blocks(index.sqrt_gamma_max_pt, bn, nb),
+                _pad_cols(index.amin_scale, bn, nb),
+                _pad_cols(index.amin_zp, bn, nb, fill=POS_BIG),
+                _pad_cols(index.gmax_scale, bn, nb),
+                _pad_cols(index.gmax_zp, bn, nb))
+    return (_pad_blocks(index.alpha_min_pt, bn, nb, fill=POS_BIG),
+            _pad_blocks(index.sqrt_gamma_max_pt, bn, nb))
 
 
 def _compact_candidates(mask: Array, budget: int) -> tuple[Array, Array, Array]:
@@ -482,6 +521,150 @@ def _compact_candidates(mask: Array, budget: int) -> tuple[Array, Array, Array]:
     sel = jnp.minimum(sel, n - 1).astype(jnp.int32)     # clamp empty slots
     valid = targets[None, :] <= jnp.minimum(num_candidates, budget)[:, None]
     return sel, valid, num_candidates
+
+
+def _stream_prune_compact(index: BallForest, qs: dict, qb: Array,
+                          budget: int, block_rows: int,
+                          row_offset: Array | None = None):
+    """Streaming prune + compact: one scan, no (n, q) intermediates.
+
+    A second ``lax.scan`` over the filter's ``block_rows`` blocks replaces
+    :func:`_candidate_mask_batch` + :func:`_compact_candidates` (kept as
+    the bit-parity reference).  Per block:
+
+    1. **Envelope gate** — the block's corner-envelope window (the
+       ENV_BLOCK_ROWS-group rows covering it, ``dynamic_slice`` from the
+       tiny replicated tables) runs the Theorem-3 test at block
+       granularity.  An envelope dominates every row it covers, so a
+       block NO query admits is skipped via ``lax.cond`` — its per-point
+       corner tile is never read, its admit kernel never runs.
+    2. **Fused per-point admit** — surviving blocks call the
+       ``bregman_prune_block`` kernel (corner decode in the int8 tier,
+       lower-bound recompute, compare, mask emit in one pass) -> a
+       (block, q) int32 tile.
+    3. **Streaming compaction** — the running member count carried across
+       blocks names which budget slots this block fills
+       (``count .. count+block_total``); those slots find their rows by
+       binary search on the block's admit prefix-sum, a blockwise
+       ``searchsorted`` identical in slot semantics to the reference
+       compaction (slot order = index order) but O(q * budget * log bn)
+       per block with NO scatter (XLA CPU serializes scatters) and no
+       array longer than the block.
+
+    ``row_offset`` maps local rows to GLOBAL envelope rows for the
+    sharded path (dist/knn.py keeps the envelope tables replicated and
+    passes ``axis_index * local_n``); single-host callers leave it None.
+    Returns ``(sel (q, budget), valid (q, budget), num_candidates (q,),
+    env_admitted (q,), blocks_run ())``: ``env_admitted`` counts, per
+    query, the (block, query) tiles the envelope gate admitted —
+    ``nb * q - sum(env_admitted)`` tiles were rejected at envelope level
+    — while ``blocks_run`` counts the blocks whose per-point kernel
+    actually executed (a block runs, for ALL its query columns, whenever
+    ANY query admits it).
+    """
+    from repro.kernels import ops as kernel_ops
+    n = index.alpha_min_pt.shape[0]
+    q, m = qb.shape
+    bn, nb = _block_layout(n, block_rows)
+    offs = jnp.arange(nb, dtype=jnp.int32) * bn
+    xs = _corner_blocks(index, bn, nb) + (offs,)
+
+    # Envelope tables: a block of bn rows spans at most win =
+    # ceil(bn / ENV_BLOCK_ROWS) + 1 envelope rows at any alignment.  Pad
+    # with inert rows (never admit) so every window is in range: block
+    # starts lie below the covered row count, hence window starts below
+    # the unpadded table length.
+    env_a, env_g = index.env_alpha_min, index.env_sqrt_gamma_max
+    win = -(-bn // ENV_BLOCK_ROWS) + 1
+    if env_a is None:
+        if row_offset is not None:
+            # The sharded path must carry GLOBAL envelope tables
+            # (shard_index refreshes them); a local-n-sized always-admit
+            # fallback indexed at a global offset would silently skip
+            # every block on shards past the first.
+            raise ValueError(
+                "sharded streaming prune needs envelope tables; pass the "
+                "forest through shard_index/refresh_envelopes first")
+        # Hand-built index without envelopes: a full-length always-admit
+        # table keeps the scan structure with skipping disabled.  It must
+        # cover EVERY block's window (not just block 0), or later blocks
+        # would slice into the inert padding and be wrongly skipped.
+        ne = max(-(-n // ENV_BLOCK_ROWS), 1)
+        env_a = jnp.full((ne, m), -POS_BIG, jnp.float32)
+        env_g = jnp.zeros((ne, m), jnp.float32)
+    env_a = jnp.pad(env_a, ((0, win), (0, 0)), constant_values=POS_BIG)
+    env_g = jnp.pad(env_g, ((0, win), (0, 0)))
+    qcT, sdT, qbT = qs["qconst"].T, qs["sqrt_delta"].T, qb.T   # (M, q)
+
+    def step(carry, blk):
+        sel, count, admitted, blocks_run = carry
+        off = blk[-1]
+        goff = off if row_offset is None else row_offset + off
+        e0 = goff // ENV_BLOCK_ROWS
+        wa = jax.lax.dynamic_slice(env_a, (e0, 0), (win, env_a.shape[1]))
+        wg = jax.lax.dynamic_slice(env_g, (e0, 0), (win, env_g.shape[1]))
+        # The static window is sized for the worst misalignment; rows past
+        # the block's actual envelope span (e.g. the whole +1 row when the
+        # block is ENV-aligned) are masked inert so they cannot loosen the
+        # gate.
+        e_hi = (goff + bn - 1) // ENV_BLOCK_ROWS
+        in_span = (e0 + jnp.arange(win)) <= e_hi                # (win,)
+        wa = jnp.where(in_span[:, None], wa, POS_BIG)
+        wg = jnp.where(in_span[:, None], wg, 0.0)
+        lb_env = wa[:, :, None] + qcT[None] - wg[:, :, None] * sdT[None]
+        env_admit = jnp.any(lb_env <= qbT[None], axis=(0, 1))   # (q,)
+
+        def run(args):
+            sel, count = args
+            if index.storage == "int8":
+                am, gm, a_s, a_z, g_s, g_z, _ = blk
+                admit = kernel_ops.bregman_prune_block_quant(
+                    am, a_s, a_z, gm, g_s, g_z,
+                    qs["qconst"], qs["sqrt_delta"], qb)          # (bn, q)
+            else:
+                am, gm, _ = blk
+                admit = kernel_ops.bregman_prune_block(
+                    am, gm, qs["qconst"], qs["sqrt_delta"], qb)
+            gidx = off + jnp.arange(bn, dtype=jnp.int32)
+            admit = admit * (gidx < n).astype(jnp.int32)[:, None]
+            csum = jnp.cumsum(admit, axis=0)                     # (bn, q)
+            tot = csum[-1]                                       # (q,)
+            # A block fills the contiguous slot range [count, count+tot);
+            # the row of within-block member rank r is found by binary
+            # search on the block prefix-sum (the blockwise analogue of
+            # _compact_candidates' searchsorted).  Only min(bn, budget)
+            # ranks can occur per block, so the search is rank-limited and
+            # a budget-sized gather+select routes each slot to its rank —
+            # no scatter anywhere (XLA CPU serializes scatters).
+            t_ranks = min(bn, budget)
+            ranks = jnp.arange(1, t_ranks + 1, dtype=jnp.int32)
+            rows_for_rank = jax.vmap(
+                lambda c: jnp.searchsorted(c, ranks, side="left"))(csum.T)
+            rows_for_rank = jnp.minimum(rows_for_rank,
+                                        bn - 1).astype(jnp.int32)  # (q, T)
+            r0 = (jnp.arange(budget, dtype=jnp.int32)[None, :]
+                  - count[:, None])                              # rank-1
+            fill = (r0 >= 0) & (r0 < tot[:, None])
+            rows_at_slot = jnp.take_along_axis(
+                rows_for_rank, jnp.clip(r0, 0, t_ranks - 1), axis=1)
+            sel = jnp.where(fill, off + rows_at_slot, sel)
+            return sel, count + tot
+
+        any_admit = jnp.any(env_admit)
+        sel, count = jax.lax.cond(any_admit, run,
+                                  lambda args: args, (sel, count))
+        return (sel, count, admitted + env_admit.astype(jnp.int32),
+                blocks_run + any_admit.astype(jnp.int32)), None
+
+    # Unfilled slots hold n-1, matching _compact_candidates' clamp, so the
+    # two implementations agree bit-for-bit on every output.
+    init = (jnp.full((q, budget), n - 1, jnp.int32),
+            jnp.zeros((q,), jnp.int32), jnp.zeros((q,), jnp.int32),
+            jnp.zeros((), jnp.int32))
+    (sel, count, admitted, blocks_run), _ = jax.lax.scan(step, init, xs)
+    targets = jnp.arange(1, budget + 1, dtype=jnp.int32)
+    valid = targets[None, :] <= jnp.minimum(count, budget)[:, None]
+    return sel, valid, count, admitted, blocks_run
 
 
 def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
@@ -512,8 +695,8 @@ def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
 
 
 def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
-                           p_guarantee: Array | None,
-                           block_rows: int) -> SearchResult:
+                           p_guarantee: Array | None, block_rows: int,
+                           streaming: bool = True, with_stats: bool = False):
     if k > index.n:
         # The streaming merge always has >= k columns, so without this guard
         # a too-large k would silently return sentinel rows as "exact".
@@ -542,15 +725,23 @@ def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
                         jnp.sum(kappa_i, -1), p_guarantee)
         qb = kappa_i + c[:, None] * sqrt_term
 
-    # ---- phase 3: one broadcasted Theorem-3 prune for the whole batch ----
-    mask = _candidate_mask_batch(index, qs, qb, block_rows)
-
-    # ---- phase 4: static-budget compaction + one batched refine ----
-    sel, valid, num_candidates = _compact_candidates(mask, budget)
+    # ---- phase 3+4: streaming prune + compact (block-skip from envelopes),
+    # then one batched refine ----
+    if streaming:
+        (sel, valid, num_candidates, env_admitted,
+         blocks_run) = _stream_prune_compact(index, qs, qb, budget,
+                                             block_rows)
+    else:
+        # Reference path: materialized (n, q) mask + (q, n) cumsum.
+        mask = _candidate_mask_batch(index, qs, qb, block_rows)
+        sel, valid, num_candidates = _compact_candidates(mask, budget)
+        env_admitted = jnp.zeros((ys.shape[0],), jnp.int32)
+        blocks_run = jnp.zeros((), jnp.int32)
     ids, dists = _refine_batch(index, qs, sel, valid, k)
-    return SearchResult(ids=ids, dists=dists,
-                        exact=num_candidates <= budget,
-                        num_candidates=num_candidates)
+    res = SearchResult(ids=ids, dists=dists,
+                       exact=num_candidates <= budget,
+                       num_candidates=num_candidates)
+    return (res, env_admitted, blocks_run) if with_stats else res
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
@@ -560,10 +751,11 @@ def _knn_search_batch_jit(index: BallForest, ys: Array, k: int, budget: int,
 
 
 def knn_search_batch(index, ys: Array, k: int, budget: int,
-                     block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
+                     block_rows: int | None = None) -> SearchResult:
     """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
-    return _knn_search_batch_jit(_as_forest(index, k), ys, k, budget,
-                                 block_rows)
+    index = _as_forest(index, k)
+    return _knn_search_batch_jit(index, ys, k, budget,
+                                 resolve_block_rows(block_rows, index.n))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
@@ -577,11 +769,93 @@ def _knn_search_batch_approx_jit(
 
 def knn_search_batch_approx(
     index, ys: Array, k: int, budget: int, p_guarantee: Array,
-    block_rows: int = DEFAULT_BLOCK_ROWS,
+    block_rows: int | None = None,
 ) -> SearchResult:
     """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q."""
-    return _knn_search_batch_approx_jit(_as_forest(index, k), ys, k, budget,
-                                        p_guarantee, block_rows)
+    index = _as_forest(index, k)
+    return _knn_search_batch_approx_jit(index, ys, k, budget, p_guarantee,
+                                        resolve_block_rows(block_rows,
+                                                           index.n))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+def _knn_search_batch_stats_jit(index: BallForest, ys: Array, k: int,
+                                budget: int, block_rows: int):
+    return _knn_search_batch_core(index, ys, k, budget, None, block_rows,
+                                  with_stats=True)
+
+
+def knn_search_batch_stats(index, ys: Array, k: int, budget: int,
+                           block_rows: int | None = None,
+                           ) -> tuple[SearchResult, dict]:
+    """:func:`knn_search_batch` plus envelope block-skip telemetry.
+
+    Returns ``(result, stats)`` with the streaming scan's shape
+    (``num_blocks``, resolved ``block_rows``) and two distinct skip
+    metrics — read them carefully when capacity planning:
+
+    * ``block_skip_rate`` — fraction of (block, query) TILES the envelope
+      gate rejected.  A rejected tile provably contributes no candidate,
+      but its block's per-point kernel still runs (for all query columns)
+      if ANY other query admits the block.
+    * ``whole_block_skip_rate`` — fraction of BLOCKS whose per-point
+      kernel never executed because every query rejected them; this is
+      the fraction of per-point admit compute actually avoided.
+
+    Same compiled pipeline as the plain entry point modulo the returned
+    counters; meant for benchmarks and capacity planning, not the serving
+    hot path.
+    """
+    index = _as_forest(index, k)
+    br = resolve_block_rows(block_rows, index.n)
+    res, env_admitted, blocks_run = _knn_search_batch_stats_jit(
+        index, ys, k, budget, br)
+    bn, nb = _block_layout(index.n, br)
+    tiles = nb * ys.shape[0]
+    stats = {
+        "block_rows": bn,
+        "num_blocks": nb,
+        "num_blocks_run": int(blocks_run),
+        "env_admitted_tiles": int(jnp.sum(env_admitted)),
+        "block_skip_rate": 1.0 - float(jnp.sum(env_admitted)) / tiles,
+        "whole_block_skip_rate": 1.0 - int(blocks_run) / nb,
+    }
+    return res, stats
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+def _knn_search_batch_ref_jit(index: BallForest, ys: Array, k: int,
+                              budget: int, block_rows: int) -> SearchResult:
+    return _knn_search_batch_core(index, ys, k, budget, None, block_rows,
+                                  streaming=False)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+def _knn_search_batch_ref_approx_jit(
+    index: BallForest, ys: Array, k: int, budget: int, p_guarantee: Array,
+    block_rows: int,
+) -> SearchResult:
+    return _knn_search_batch_core(index, ys, k, budget, p_guarantee,
+                                  block_rows, streaming=False)
+
+
+def knn_search_batch_reference(index, ys: Array, k: int, budget: int,
+                               p_guarantee: Array | None = None,
+                               block_rows: int | None = None) -> SearchResult:
+    """The materialized mask/cumsum pipeline — the bit-parity oracle.
+
+    Identical math to :func:`knn_search_batch` but pruning via the full
+    (n, q) Theorem-3 mask and compaction via the (q, n) cumsum binary
+    search (the pre-streaming implementation).  O(n * q) peak memory, so
+    tests and benchmarks only; the streamed path must match it
+    bit-for-bit on every output field.
+    """
+    index = _as_forest(index, k)
+    br = resolve_block_rows(block_rows, index.n)
+    if p_guarantee is None:
+        return _knn_search_batch_ref_jit(index, ys, k, budget, br)
+    return _knn_search_batch_ref_approx_jit(index, ys, k, budget,
+                                            jnp.float32(p_guarantee), br)
 
 
 # ---------------------------------------------------------------------------
@@ -641,7 +915,7 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
 def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
               approx_p: float | None = None, *,
               max_doublings: int = MAX_BUDGET_DOUBLINGS,
-              block_rows: int = DEFAULT_BLOCK_ROWS) -> SearchResult:
+              block_rows: int | None = None) -> SearchResult:
     """Batched kNN via the fused :func:`knn_search_batch` pipeline.
 
     One retry policy for the whole batch: if ANY query's Theorem-3 union
@@ -653,6 +927,10 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     falls back to ONE fused brute-force scan (exact by construction, no
     per-query dataset gather), preserving the invariant that exact-mode
     results are exact and approx-mode results carry the §8 guarantee.
+
+    ``block_rows`` tunes the streaming scans' block size (peak memory vs
+    scan overhead — :func:`resolve_block_rows`); it is forwarded to every
+    retry, so one setting governs the whole call.
     """
     index = _as_forest(index, k)
     ys = jnp.asarray(ys, jnp.float32)

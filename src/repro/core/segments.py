@@ -54,6 +54,7 @@ from .index import (
     build_index,
     concat_points,
     point_fields,
+    refresh_envelopes,
     tombstone_rows,
 )
 from .partition import CostModel, decide_compaction, fit_cost_model
@@ -114,13 +115,20 @@ def _append_segment(main: BallForest, points: Array,
         # Exact per-point stats are in hand, so the (singleton) corner
         # codes round directionally from the TRUE values — same
         # conservatism as build, one shared encode rule.
-        return dataclasses.replace(
+        seg = dataclasses.replace(
             main, data=codes, data_scale=d_scale, data_zp=d_zp,
             point_ids=ids, assign=assign_eff,
             **qz.encode_stat_tables(alpha, sqrt_gamma, alpha, sqrt_gamma))
-    return dataclasses.replace(
-        main, data=pts, point_ids=ids, alpha=alpha, sqrt_gamma=sqrt_gamma,
-        assign=assign_eff, alpha_min_pt=alpha, sqrt_gamma_max_pt=sqrt_gamma)
+    else:
+        seg = dataclasses.replace(
+            main, data=pts, point_ids=ids, alpha=alpha,
+            sqrt_gamma=sqrt_gamma, assign=assign_eff, alpha_min_pt=alpha,
+            sqrt_gamma_max_pt=sqrt_gamma)
+    # The segment's block envelopes come from ITS (decoded singleton)
+    # corners, not the main segment's — the snapshot concat recomputes the
+    # global table, but a self-consistent per-segment table keeps every
+    # BallForest independently searchable.
+    return refresh_envelopes(seg)
 
 
 @dataclasses.dataclass
@@ -400,16 +408,22 @@ class SegmentedForest:
         amin_pt, gmax_pt = take_pt(amin, assign), take_pt(gmax, assign)
         if self.main.storage == "int8":
             corners = qz.encode_corner_tables(amin_pt, gmax_pt)
-            return dataclasses.replace(
+            merged = dataclasses.replace(
                 self.main,
                 **{f: arrays[f] for f in fields if f not in corners},
                 alpha_min=amin, sqrt_gamma_max=gmax, counts=counts,
                 **corners)
-        return dataclasses.replace(
-            self.main, data=arrays["data"], point_ids=arrays["point_ids"],
-            alpha=alpha, sqrt_gamma=sqrt_gamma, assign=assign,
-            alpha_min=amin, sqrt_gamma_max=gmax, counts=counts,
-            alpha_min_pt=amin_pt, sqrt_gamma_max_pt=gmax_pt)
+        else:
+            merged = dataclasses.replace(
+                self.main, data=arrays["data"],
+                point_ids=arrays["point_ids"],
+                alpha=alpha, sqrt_gamma=sqrt_gamma, assign=assign,
+                alpha_min=amin, sqrt_gamma_max=gmax, counts=counts,
+                alpha_min_pt=amin_pt, sqrt_gamma_max_pt=gmax_pt)
+        # Dead rows are gone and the layout re-sorted, so the block
+        # envelopes are refit exactly (tombstoning itself only ever leaves
+        # them conservatively loose — index.tombstone_rows).
+        return refresh_envelopes(merged)
 
 
 def build_segmented_index(data, family, **build_kwargs) -> SegmentedForest:

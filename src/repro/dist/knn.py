@@ -25,9 +25,17 @@ per-shard point count (where the union always fits), so the flag is
 truthful without any brute-force escape hatch.
 
 The per-shard phases are the REUSED batched-pipeline helpers
-(``_batch_filter_topk`` / ``_candidate_mask_batch`` -> ``_corner_admit`` /
-``_compact_candidates`` / ``_refine_batch``) — one implementation of the
-math, two launch shapes.
+(``_batch_filter_topk`` / ``_stream_prune_compact`` / ``_refine_batch``) —
+one implementation of the math, two launch shapes.  The prune+compact is
+the same streaming scan as the single-host path: per-shard peak memory is
+O(block_rows * q + q * budget), never O(local_n * q), and the block-level
+corner-envelope gate skips dead (block, query) tiles per shard.  The
+envelope tables (``env_alpha_min``/``env_sqrt_gamma_max``) are GLOBAL and
+replicated (they ride ``REPLICATED_FIELDS``); each shard addresses its
+own slice with ``axis_index * local_n``, so envelope rows straddling a
+shard boundary are simply read by both neighbors — an envelope over a
+superset of rows is still a dominator, so the skip stays loss-free at any
+alignment.
 """
 
 from __future__ import annotations
@@ -43,13 +51,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import bounds
 from repro.core.bregman import get_family
 from repro.core.index import (BallForest, REPLICATED_FIELDS, pad_points,
-                              point_fields)
+                              point_fields, refresh_envelopes)
 from repro.core.quantize import ub_slack
-from repro.core.search import (DEFAULT_BLOCK_ROWS, MAX_BUDGET_DOUBLINGS,
+from repro.core.search import (MAX_BUDGET_DOUBLINGS,
                                SearchResult, _batch_filter_topk,
-                               _candidate_mask_batch, _cdf_shrink,
-                               _compact_candidates, _refine_batch,
-                               _tuple_rows, fitted_budget_for_n)
+                               _cdf_shrink, _refine_batch,
+                               _stream_prune_compact, _tuple_rows,
+                               fitted_budget_for_n, resolve_block_rows)
 from repro.core.transform import Partition, q_transform_views
 from . import sharding as shd
 
@@ -128,6 +136,10 @@ def shard_index(forest, mesh: Mesh, axis: str = "data") -> ShardedForest:
     view = getattr(forest, "view", None)
     if callable(view):
         forest = view()
+    if forest.env_alpha_min is None:
+        # Hand-assembled forest without envelope tables: derive them here
+        # so every shard program can rely on the replicated global tables.
+        forest = refresh_envelopes(forest)
     padded = pad_points(forest, int(mesh.shape[axis]))
 
     def put(a, spec):
@@ -136,7 +148,8 @@ def shard_index(forest, mesh: Mesh, axis: str = "data") -> ShardedForest:
     placed = dataclasses.replace(
         padded,
         **{f: put(getattr(padded, f), P(axis)) for f in point_fields(padded)},
-        **{f: put(getattr(padded, f), P()) for f in REPLICATED_FIELDS})
+        **{f: put(getattr(padded, f), P()) for f in REPLICATED_FIELDS
+           if getattr(padded, f) is not None})
     return ShardedForest(forest=placed, mesh=mesh, axis=axis,
                          global_n=forest.n, live_n=live_n)
 
@@ -188,9 +201,12 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
                             jnp.sum(kappa_i, -1), p_guarantee)
             qb = kappa_i + c[:, None] * sqrt_term
 
-        # ---- local prune + compact + refine (reused fused phases) ----
-        mask = _candidate_mask_batch(local, qs, qb, block_rows)
-        sel_c, valid, ncand = _compact_candidates(mask, budget)
+        # ---- local streaming prune + compact + refine (reused phases) ----
+        # The replicated envelope tables are GLOBAL; this shard's rows
+        # start at axis_index * local_n of the padded global layout.
+        offset = jax.lax.axis_index(axis).astype(jnp.int32) * local.n
+        sel_c, valid, ncand, _, _ = _stream_prune_compact(
+            local, qs, qb, budget, block_rows, row_offset=offset)
         ids, dists = _refine_batch(local, qs, sel_c, valid, k)
 
         # ---- k-way merge + exactness/union-size reductions ----
@@ -222,12 +238,14 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
 def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
                     budget: int, mesh: Mesh | None = None,
                     approx_p: float | None = None,
-                    block_rows: int = DEFAULT_BLOCK_ROWS,
+                    block_rows: int | None = None,
                     max_doublings: int = MAX_BUDGET_DOUBLINGS) -> SearchResult:
     """Batched kNN over a sharded index — the distributed ``knn_batch``.
 
     ``queries`` is a (q, d) block or a prebuilt :class:`QueryView`;
-    ``budget`` is the PER-SHARD refine budget (clamped to the shard size).
+    ``budget`` is the PER-SHARD refine budget (clamped to the shard size);
+    ``block_rows`` tunes the per-shard streaming scans exactly like the
+    single-host pipeline (``core.search.resolve_block_rows``).
     Returns the usual ``(ids, dists, exact, num_candidates)`` with
     ``num_candidates`` the global Theorem-3 union size per query.  On
     overflow the whole block retries with a budget fitted to the largest
@@ -246,6 +264,7 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     qv = (queries if isinstance(queries, QueryView)
           else query_subview(forest.partition, queries))
     local_n = sharded.local_n
+    block_rows = resolve_block_rows(block_rows, sharded.global_live_n)
     b = max(min(int(budget), local_n), k)
     arrs = {f: getattr(forest, f)
             for f in point_fields(forest) + REPLICATED_FIELDS}

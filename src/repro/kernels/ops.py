@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import ref
 from . import bregman_ub as _ub
 from . import bregman_dist as _dist
+from . import bregman_prune as _prune
 from . import pccp_corr as _corr
 from . import flash_attention as _flash
 
@@ -93,6 +94,42 @@ def bregman_ub_matrix_quant(alpha_q, alpha_scale, alpha_zp, sg_q, sg_scale,
                                        sg_q, sg_scale, sg_zp, qsum,
                                        sqrt_delta,
                                        interpret=(mode == "interpret"))
+
+
+def bregman_prune_block(amin, gmax, qconst, sqrt_delta, qb, impl=None):
+    """Theorem-3 admit mask for a row block.  (n,M)x2, (q,M)x3 -> (n,q) int32.
+
+    The per-point stage of the streaming prune+compact scan
+    (core/search._stream_prune_compact): one fused corner-compare pass per
+    block, no (n, M, q) lower-bound tensor outside the kernel.
+    """
+    if qconst.ndim != 2 or sqrt_delta.ndim != 2 or qb.ndim != 2:
+        raise ValueError(
+            "bregman_prune_block wants (q, M) query operands, got "
+            f"{qconst.shape}/{sqrt_delta.shape}/{qb.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_prune_mask(amin, gmax, qconst, sqrt_delta, qb)
+    return _prune.bregman_prune_mask(amin, gmax, qconst, sqrt_delta, qb,
+                                     interpret=(mode == "interpret"))
+
+
+def bregman_prune_block_quant(amin_q, amin_scale, amin_zp, gmax_q,
+                              gmax_scale, gmax_zp, qconst, sqrt_delta, qb,
+                              impl=None):
+    """Admit mask from int8 corner codes (per-row affine, directed-rounded)."""
+    if qconst.ndim != 2 or sqrt_delta.ndim != 2 or qb.ndim != 2:
+        raise ValueError(
+            "bregman_prune_block_quant wants (q, M) query operands, got "
+            f"{qconst.shape}/{sqrt_delta.shape}/{qb.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_prune_mask_quant(
+            amin_q, amin_scale, amin_zp, gmax_q, gmax_scale, gmax_zp,
+            qconst, sqrt_delta, qb)
+    return _prune.bregman_prune_mask_quant(
+        amin_q, amin_scale, amin_zp, gmax_q, gmax_scale, gmax_zp,
+        qconst, sqrt_delta, qb, interpret=(mode == "interpret"))
 
 
 def bregman_refine(rows, grad, c_y, family: str, impl=None):

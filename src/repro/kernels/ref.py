@@ -52,6 +52,37 @@ def bregman_ub_matrix_quant(alpha_q: Array, alpha_scale: Array,
     return arow[:, None] + qsum[None, :] + cauchy
 
 
+def bregman_prune_mask(amin: Array, gmax: Array, qconst: Array,
+                       sqrt_delta: Array, qb: Array) -> Array:
+    """Theorem-3 per-point admit mask.  (n,M)x3 query (q,M) -> (n,q) int32.
+
+    Admit point x for query y iff SOME subspace's tuple-space cluster
+    lower bound (evaluated through the per-point corner view) is within
+    that subspace's Alg.-4 searching bound — core/search._corner_admit,
+    as a kernel oracle.  The (n, M, q) intermediate is fine here: the
+    reference is only ever called on one block_rows-sized tile.
+    """
+    lb = (amin[:, :, None] + qconst.T[None, :, :]
+          - gmax[:, :, None] * sqrt_delta.T[None, :, :])     # (n, M, q)
+    return jnp.any(lb <= qb.T[None, :, :], axis=1).astype(jnp.int32)
+
+
+def bregman_prune_mask_quant(amin_q: Array, amin_scale: Array,
+                             amin_zp: Array, gmax_q: Array,
+                             gmax_scale: Array, gmax_zp: Array,
+                             qconst: Array, sqrt_delta: Array,
+                             qb: Array) -> Array:
+    """Admit mask from int8 corner codes + per-row affine decode.
+
+    Decoding goes through core/quantize.dequantize_stats itself, so the
+    (directed-rounded, conservative) corner values match what every other
+    consumer of the int8 corner tables sees.
+    """
+    amin = qz.dequantize_stats(amin_q, amin_scale, amin_zp)
+    gmax = qz.dequantize_stats(gmax_q, gmax_scale, gmax_zp)
+    return bregman_prune_mask(amin, gmax, qconst, sqrt_delta, qb)
+
+
 def bregman_refine_batch_quant(codes: Array, scale: Array, zp: Array,
                                grad: Array, c_y: Array, family: str) -> Array:
     """Fused dequantize + exact D_f over int8 candidate rows.

@@ -53,6 +53,12 @@ class Datastore:
     next_tokens: np.ndarray     # (next_id,) int32 — token following each key
     hidden_dim: int
     version: int = 0            # bumped on every mutation (cache invalidation)
+    # Streaming block size for searches over this store (None = pipeline
+    # default).  Deployment-level knob: smaller blocks cap the per-tick
+    # peak intermediate bytes (O(block_rows * q)), larger blocks amortize
+    # scan overhead — see core.search.resolve_block_rows.  Hooks read it
+    # as their default; per-hook overrides win.
+    block_rows: int | None = None
     # Threshold-triggered compaction runs a CostModel fit (and possibly a
     # full rebuild) synchronously inside grow()/evict(); serving
     # deployments that cannot absorb that pause on the request path set
@@ -106,6 +112,7 @@ class Datastore:
 def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
                     family: str = "squared_euclidean",
                     m: int | None = None, quantize: bool = False,
+                    block_rows: int | None = None,
                     seed: int = 0) -> Datastore:
     """Teacher-forced pass over (num_seqs, seq_len) tokens -> datastore.
 
@@ -132,7 +139,7 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
     vals = np.asarray(corpus_tokens[:, 1:].reshape(-1), np.int32)
     index = build_index(keys, family, m=m, quantize=quantize, seed=seed)
     return Datastore(index=index, next_tokens=vals,
-                     hidden_dim=keys.shape[-1])
+                     hidden_dim=keys.shape[-1], block_rows=block_rows)
 
 
 @dataclasses.dataclass
@@ -152,6 +159,7 @@ class KNNLMHook:
     temperature: float = 1.0
     approx_p: float | None = None   # paper §8 approximate mode
     budget: int | None = None       # pinned refine budget (stable jit cache)
+    block_rows: int | None = None   # streaming block size (None -> store's)
     queries_served: int = 0
     # next_tokens cached on device (lazy, refreshed when the store mutates)
     _next_dev: Array | None = dataclasses.field(
@@ -180,7 +188,9 @@ class KNNLMHook:
         # overflows fall back to the capped sized retry.
         res = bp_search.knn_batch(self.store.index, h, self.k,
                                   budget=self.budget,
-                                  approx_p=self.approx_p)
+                                  approx_p=self.approx_p,
+                                  block_rows=(self.block_rows
+                                              or self.store.block_rows))
         self.queries_served += int(h.shape[0])
         # Grow-only budget adaptation: only when this step's unions outgrew
         # the effective budget (no pin is installed while the default

@@ -10,6 +10,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
 from repro.kernels.bregman_ub import bregman_ub_matrix, bregman_ub_matrix_quant
+from repro.kernels.bregman_prune import (bregman_prune_mask,
+                                         bregman_prune_mask_quant)
 from repro.kernels.bregman_dist import bregman_refine
 from repro.kernels.pccp_corr import pccp_correlation
 from repro.kernels.flash_attention import flash_attention
@@ -71,6 +73,65 @@ def test_ub_quant_kernel_property(n, m, q, seed):
     want = ref.bregman_ub_matrix_quant(a_q, a_s, a_z, g_q, g_s, g_z, qc, sd)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bregman_prune (Theorem-3 admit mask)
+# ---------------------------------------------------------------------------
+
+def _prune_inputs(rng, n, m, q):
+    amin = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    gmax = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    # bounds near the lb distribution so both mask values actually occur
+    qb = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    return amin, gmax, qc, sd, qb
+
+
+@pytest.mark.parametrize("n,m,q", [(64, 8, 1), (100, 28, 3), (257, 50, 5),
+                                   (32, 1, 1), (7, 5, 2)])
+def test_prune_kernel_shapes(n, m, q):
+    rng = np.random.default_rng(0)
+    amin, gmax, qc, sd, qb = _prune_inputs(rng, n, m, q)
+    got = bregman_prune_mask(amin, gmax, qc, sd, qb,
+                             block_n=32, block_q=4, interpret=True)
+    want = ref.bregman_prune_mask(amin, gmax, qc, sd, qb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+    # non-degenerate case: both admitted and pruned pairs exist
+    if n * q >= 500:
+        assert 0 < int(np.asarray(got).sum()) < n * q
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_prune_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    amin, gmax, qc, sd, qb = _prune_inputs(rng, n, m, q)
+    got = bregman_prune_mask(amin, gmax, qc, sd, qb, interpret=True)
+    want = ref.bregman_prune_mask(amin, gmax, qc, sd, qb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_prune_quant_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    a_q, a_s, a_z = qz.quantize_stats(
+        jnp.asarray(rng.normal(size=(n, m)), jnp.float32), "floor")
+    g_q, g_s, g_z = qz.quantize_stats(
+        jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32), "ceil")
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    qb = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    got = bregman_prune_mask_quant(a_q, a_s, a_z, g_q, g_s, g_z,
+                                   qc, sd, qb, interpret=True)
+    want = ref.bregman_prune_mask_quant(a_q, a_s, a_z, g_q, g_s, g_z,
+                                        qc, sd, qb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

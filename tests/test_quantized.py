@@ -156,6 +156,30 @@ def test_refine_quant_kernel_parity(family, qn, b, d):
                                rtol=1e-3, atol=1e-3)
 
 
+@pytest.mark.parametrize("n,m,q", [(64, 8, 1), (100, 28, 3), (7, 5, 2)])
+def test_prune_quant_kernel_matches_ref_and_is_conservative(n, m, q):
+    """Fused int8 admit mask == ref; decoded-corner admits ⊇ fp32 admits."""
+    from repro.kernels import ref
+    from repro.kernels.bregman_prune import bregman_prune_mask_quant
+    rng = np.random.default_rng(0)
+    amin = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    gmax = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+    a_q, a_s, a_z = qz.quantize_stats(amin, "floor")
+    g_q, g_s, g_z = qz.quantize_stats(gmax, "ceil")
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    qb = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    got = bregman_prune_mask_quant(a_q, a_s, a_z, g_q, g_s, g_z, qc, sd, qb,
+                                   block_n=32, block_q=4, interpret=True)
+    want = ref.bregman_prune_mask_quant(a_q, a_s, a_z, g_q, g_s, g_z,
+                                        qc, sd, qb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Directed rounding makes the decoded test CONSERVATIVE: every pair
+    # the true-corner test admits, the decoded-corner test admits too.
+    full = ref.bregman_prune_mask(amin, gmax, qc, sd, qb)
+    assert (np.asarray(got) >= np.asarray(full)).all()
+
+
 # ---------------------------------------------------------------------------
 # Parity: single-query, batched, approximate
 # ---------------------------------------------------------------------------

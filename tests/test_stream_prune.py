@@ -1,0 +1,271 @@
+"""Streaming prune+compact parity + block-envelope invariants.
+
+The contract under test: the streamed, envelope-gated prune+compact scan
+(``core/search._stream_prune_compact``) is BIT-IDENTICAL to the
+materialized mask/cumsum reference (``knn_search_batch_reference``) on
+every output field, across all five Bregman families x {exact, approx} x
+{fp32, int8} x {BallForest, mutated SegmentedForest, 1x1-mesh
+distributed}; block envelopes always dominate their rows' per-point
+corners (including after tombstone and merge); and the envelope gate
+actually skips (block, query) tiles on clustered data.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.bregman import family_names, get_family
+from repro.core.index import (ENV_BLOCK_ROWS, build_index, corner_envelopes,
+                              pad_points, tombstone_rows)
+from repro.core.quantize import decoded_corner_tables
+from repro.core.segments import build_segmented_index
+from repro.core import search
+from repro.dist import knn as dknn
+from repro.dist.sharding import make_mesh
+
+N, D, M, Q, K = 420, 16, 4, 4, 5
+BLOCK_ROWS = 96          # multi-block AND misaligned with ENV_BLOCK_ROWS
+P_APPROX = 0.8
+
+
+def _assert_bitwise_equal(a, b):
+    for f in ("ids", "dists", "exact", "num_candidates"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+@functools.lru_cache(maxsize=None)
+def _built(family, quantize):
+    fam = get_family(family)
+    data = np.asarray(fam.sample(jax.random.PRNGKey(0), (N, D), scale=1.0))
+    queries = jnp.asarray(np.asarray(
+        fam.sample(jax.random.PRNGKey(1), (Q, D), scale=1.0)))
+    index = build_index(data, family, m=M, num_clusters=8, seed=0,
+                        quantize=quantize)
+    return index, queries
+
+
+@functools.lru_cache(maxsize=None)
+def _mutated(family, quantize):
+    fam = get_family(family)
+    data = np.asarray(fam.sample(jax.random.PRNGKey(2), (N, D), scale=1.0))
+    sf = build_segmented_index(data[:N - 64], family, m=M, num_clusters=8,
+                               seed=0, quantize=quantize)
+    sf.insert(data[N - 64:], auto_compact=False)
+    sf.delete([1, 5, N - 30], auto_compact=False)
+    return sf
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("family", family_names())
+def test_stream_matches_reference_ballforest(family, quantize):
+    """Exact + approx, fp32 + int8: streamed == mask/cumsum, bit for bit."""
+    index, queries = _built(family, quantize)
+    budget = 64
+    res = search.knn_search_batch(index, queries, K, budget,
+                                  block_rows=BLOCK_ROWS)
+    ref = search.knn_search_batch_reference(index, queries, K, budget,
+                                            block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res, ref)
+
+    res_a = search.knn_search_batch_approx(index, queries, K, budget,
+                                           jnp.float32(P_APPROX),
+                                           block_rows=BLOCK_ROWS)
+    ref_a = search.knn_search_batch_reference(index, queries, K, budget,
+                                              p_guarantee=P_APPROX,
+                                              block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res_a, ref_a)
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("family", family_names())
+def test_stream_matches_reference_mutated_segmented(family, quantize):
+    """Same parity over a segmented index with appends + tombstones."""
+    sf = _mutated(family, quantize)
+    fam = get_family(family)
+    queries = jnp.asarray(np.asarray(
+        fam.sample(jax.random.PRNGKey(3), (Q, D), scale=1.0)))
+    budget = sf.live_n
+    res = search.knn_search_batch(sf, queries, K, budget,
+                                  block_rows=BLOCK_ROWS)
+    ref = search.knn_search_batch_reference(sf, queries, K, budget,
+                                            block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res, ref)
+    assert bool(jnp.all(res.exact))
+    # tombstoned ids can never surface through the streamed compaction
+    gone = {1, 5, N - 30}
+    assert not gone & set(np.asarray(res.ids).ravel().tolist())
+
+    res_a = search.knn_search_batch_approx(sf, queries, K, budget,
+                                           jnp.float32(P_APPROX),
+                                           block_rows=BLOCK_ROWS)
+    ref_a = search.knn_search_batch_reference(sf, queries, K, budget,
+                                              p_guarantee=P_APPROX,
+                                              block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res_a, ref_a)
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("family", family_names())
+def test_stream_matches_reference_distributed_1x1(family, quantize):
+    """1x1-mesh distributed == single-host streamed == reference."""
+    index, queries = _built(family, quantize)
+    budget = index.n          # union always fits -> no retry, one program
+    mesh = make_mesh((1,), ("data",))
+    sharded = dknn.shard_index(index, mesh)
+    res_d = dknn.distributed_knn(sharded, queries, family=family, k=K,
+                                 budget=budget, block_rows=BLOCK_ROWS)
+    ref = search.knn_search_batch_reference(index, queries, K, budget,
+                                            block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res_d, ref)
+
+    res_da = dknn.distributed_knn(sharded, queries, family=family, k=K,
+                                  budget=budget, approx_p=P_APPROX,
+                                  block_rows=BLOCK_ROWS)
+    ref_a = search.knn_search_batch_reference(index, queries, K, budget,
+                                              p_guarantee=P_APPROX,
+                                              block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(res_da, ref_a)
+
+
+# ---------------------------------------------------------------------------
+# Envelope invariants
+# ---------------------------------------------------------------------------
+
+def _assert_envelopes_dominate(forest):
+    """Every row's decoded corner is dominated by its block's envelope."""
+    amin, gmax = (np.asarray(t) for t in decoded_corner_tables(forest))
+    ea = np.asarray(forest.env_alpha_min)
+    eg = np.asarray(forest.env_sqrt_gamma_max)
+    n = amin.shape[0]
+    assert ea.shape[0] == max(-(-n // ENV_BLOCK_ROWS), 1)
+    grp = np.arange(n) // ENV_BLOCK_ROWS
+    assert (ea[grp] <= amin).all()
+    assert (eg[grp] >= gmax).all()
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_envelopes_dominate_after_mutations(quantize):
+    sf = _mutated("squared_euclidean", quantize)
+    for seg in [sf.main] + sf.segments:
+        _assert_envelopes_dominate(seg)
+    view = sf.view()
+    _assert_envelopes_dominate(view)
+    # padding appends inert envelope rows; domination must survive
+    _assert_envelopes_dominate(pad_points(view, 7))
+    # tombstoning leaves the tables conservatively loose, never invalid
+    dead = np.zeros(view.n, bool)
+    dead[::3] = True
+    _assert_envelopes_dominate(tombstone_rows(view, jnp.asarray(dead)))
+    # merge compaction refits them exactly
+    sf.compact("merge")
+    _assert_envelopes_dominate(sf.view())
+
+
+def test_envelope_property_random_blocks():
+    """Hypothesis sweep: corner_envelopes dominates at any n/M alignment."""
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property tests need hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(n=st.integers(1, 700), m=st.integers(1, 6),
+               seed=st.integers(0, 1000))
+    def prop(n, m, seed):
+        rng = np.random.default_rng(seed)
+        amin = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        gmax = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+        ea, eg = corner_envelopes(amin, gmax)
+        grp = np.arange(n) // ENV_BLOCK_ROWS
+        assert (np.asarray(ea)[grp] <= np.asarray(amin)).all()
+        assert (np.asarray(eg)[grp] >= np.asarray(gmax)).all()
+
+    prop()
+
+
+def test_missing_envelopes_disable_skipping_for_every_block():
+    """env=None fallback must cover ALL blocks, not just block 0.
+
+    Regression: a hand-assembled forest without envelope tables once got a
+    1-row always-admit fallback, so blocks past the first sliced into the
+    inert padding and were wrongly skipped (wrong ids with exact=True).
+    """
+    import dataclasses
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(2000, 24)).astype(np.float32)
+    index = build_index(data, "squared_euclidean", m=4, num_clusters=16,
+                        seed=0)
+    bare = dataclasses.replace(index, env_alpha_min=None,
+                               env_sqrt_gamma_max=None)
+    queries = jnp.asarray(data[1800:1806] + 0.01)   # rows far past block 0
+    res = search.knn_search_batch(bare, queries, 5, 2000, block_rows=512)
+    ref = search.knn_search_batch_reference(index, queries, 5, 2000,
+                                            block_rows=512)
+    _assert_bitwise_equal(res, ref)
+
+
+def test_block_skip_rate_positive_on_clustered_data():
+    """Well-separated blobs: whole blocks must be pruned at envelope level."""
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(1024, 32)).astype(np.float32)
+    b = rng.normal(size=(1024, 32)).astype(np.float32) + 50.0
+    index = build_index(np.concatenate([a, b]), "squared_euclidean", m=4,
+                        num_clusters=16, seed=0)
+    queries = jnp.asarray(a[:8] + 0.01)
+    res, stats = search.knn_search_batch_stats(index, queries, 5, 1024,
+                                               block_rows=ENV_BLOCK_ROWS)
+    assert bool(jnp.all(res.exact))
+    assert stats["num_blocks"] == index.n // ENV_BLOCK_ROWS
+    assert stats["block_skip_rate"] > 0.0
+    # the skipped tiles must not change results
+    ref = search.knn_search_batch_reference(index, queries, 5, 1024,
+                                            block_rows=ENV_BLOCK_ROWS)
+    _assert_bitwise_equal(res, ref)
+
+
+# ---------------------------------------------------------------------------
+# block_rows knob plumbing
+# ---------------------------------------------------------------------------
+
+def test_resolve_block_rows_validation():
+    assert search.resolve_block_rows(None, 100) == search.DEFAULT_BLOCK_ROWS
+    assert search.resolve_block_rows(64, 100) == 64
+    assert search.resolve_block_rows(10_000, 100) == 10_000   # clamped later
+    with pytest.raises(ValueError, match="block_rows"):
+        search.resolve_block_rows(0, 100)
+    with pytest.raises(ValueError, match="block_rows"):
+        search.resolve_block_rows(-64, 100)
+    with pytest.raises(ValueError, match="block_rows"):
+        search.resolve_block_rows(4.5, 100)
+    with pytest.raises(ValueError, match="empty"):
+        search.resolve_block_rows(64, 0)
+
+
+def test_knn_batch_and_hook_forward_block_rows(monkeypatch):
+    """The knob reaches the jit core from knn_batch and from KNNLMHook."""
+    from repro.serve.knnlm import Datastore, KNNLMHook
+    index, queries = _built("squared_euclidean", False)
+
+    seen = []
+    real = search._knn_search_batch_jit
+
+    def spy(index, ys, k, budget, block_rows):
+        seen.append(block_rows)
+        return real(index, ys, k, budget, block_rows)
+
+    monkeypatch.setattr(search, "_knn_search_batch_jit", spy)
+    search.knn_batch(index, queries, K, budget=64, block_rows=128)
+    assert seen[-1] == 128
+
+    store = Datastore(index=index,
+                      next_tokens=np.arange(N, dtype=np.int32) % 32,
+                      hidden_dim=D, block_rows=96)
+    hook = KNNLMHook(store=store, k=K, lam=0.5)
+    hook(jnp.zeros((2, 32)), jnp.asarray(np.asarray(queries)[:2]))
+    assert seen[-1] == 96          # store default
+    hook = KNNLMHook(store=store, k=K, lam=0.5, block_rows=192)
+    hook(jnp.zeros((2, 32)), jnp.asarray(np.asarray(queries)[:2]))
+    assert seen[-1] == 192         # per-hook override wins
