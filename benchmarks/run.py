@@ -32,6 +32,7 @@ MODULES = [
     "bench_quantized",       # int8 tier: filter bytes moved + QPS vs fp32
     "bench_incremental",     # segmented insert/delete/compact vs rebuild
     "bench_dist_knn",        # shard-count scaling (8 forced host devices)
+    "bench_retrieval",       # retrieval-service overhead (chaos: --chaos)
     "bench_kernels",         # kernel micro-benches
 ]
 

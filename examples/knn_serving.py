@@ -1,23 +1,22 @@
-"""Distributed kNN serving: the paper's workload as a multi-device SPMD
-program (dist/knn.py) with batched queries.
+"""kNN serving through the fault-tolerant retrieval service
+(serve/retrieval.py): deadlines, admission control, and the degradation
+ladder over BrePartition search — plus the distributed launch path when
+more than one device is available.
 
 On this CPU container the mesh is whatever jax.devices() offers (run under
-XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real sharding);
-on a pod the same code runs on the (pod, data, model) production mesh.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to see a sharded
+tenant); on a pod the same code runs on the production mesh.
 
     PYTHONPATH=src python examples/knn_serving.py
 """
-
-import time
 
 import jax
 import numpy as np
 
 from repro.core.index import build_index
-from repro.core import search
 from repro.data.pipeline import PAPER_DATASETS, make_queries, make_vectors
-from repro.dist.knn import distributed_knn, query_subview, shard_index
 from repro.launch.mesh import make_host_mesh
+from repro.serve import RetrievalService, ServiceConfig
 
 
 def main():
@@ -26,32 +25,55 @@ def main():
     queries = make_queries(spec, num=16, scale=0.01)
     index = build_index(data, spec.measure, m=8)
 
-    mesh = make_host_mesh()
-    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
-    sharded = shard_index(index, mesh)
-    ysub = query_subview(index.partition, jax.numpy.asarray(queries))
+    svc = RetrievalService(ServiceConfig(default_deadline_s=2.0))
+    mesh = make_host_mesh() if len(jax.devices()) > 1 else None
+    tenant = svc.register_tenant("demo", index, mesh=mesh)
+    print(f"tenant live_n={tenant.live_n} "
+          f"sharded={'yes' if tenant.sharded else 'no'}")
 
-    k, budget = 10, max(64, data.shape[0] // 8)
-    ids, dists, exact, ncand = distributed_knn(
-        sharded, ysub, family=index.family_name, k=k, budget=budget,
-        mesh=mesh)
-    jax.block_until_ready(ids)
+    # k is validated against the LIVE point count up front: an oversized k
+    # resolves to an explicit shed, never a deep pipeline error.
+    bad = svc.search_sync("demo", queries[:1], k=tenant.live_n + 1)
+    print(f"k > live_n: quality={bad.quality} reason={bad.shed_reason}")
 
-    t0 = time.time()
-    ids, dists, exact, ncand = distributed_knn(
-        sharded, ysub, family=index.family_name, k=k, budget=budget,
-        mesh=mesh)
-    jax.block_until_ready(ids)
-    dt = time.time() - t0
-    print(f"{len(queries)} queries in {dt*1e3:.1f} ms "
-          f"({dt/len(queries)*1e6:.0f} us/query), all exact: "
-          f"{bool(np.all(np.asarray(exact)))}")
+    k = 10
+    # Warm the compiled-program cache with an unhurried deadline (the
+    # budget-retry ladder compiles one program per budget size); under a
+    # tight deadline a cold cache degrades instead of blocking — exactly
+    # the ladder the chaos drill exercises (docs/serving_robustness.md).
+    for _ in range(3):
+        r = svc.search_sync("demo", queries, k, deadline_s=60.0)
+        svc.search_sync("demo", queries, k, deadline_s=60.0,
+                        target_recall=0.9)
+    r = svc.search_sync("demo", queries, k)
+    print(f"{len(queries)} queries: quality={r.quality} "
+          f"latency={r.latency_s * 1e3:.1f} ms "
+          f"deadline_met={r.deadline_met}")
 
-    # verify against the single-device reference pipeline
+    # Exact-tier responses match the single-device reference pipeline.
+    from repro.core import search
     ref = search.knn_batch(index, queries, k)
-    match = np.array_equal(np.sort(np.asarray(ids), -1),
+    match = np.array_equal(np.sort(r.ids, -1),
                            np.sort(np.asarray(ref.ids), -1))
     print(f"matches single-device BrePartition: {match}")
+
+    # Degraded tiers on demand: a deadline below the known launch cost
+    # walks the ladder (exact -> approx -> partial -> shed) instead of
+    # blowing the budget.  The quality label reports what actually ran.
+    for frac, note in ((1.5, "approx window"), (0.7, "partial window"),
+                       (0.1, "must shed")):
+        est = tenant.cost.estimate()     # the ladder prices with LIVE est
+        resp = svc.search_sync("demo", queries, k, deadline_s=est * frac)
+        print(f"deadline={est * frac * 1e3:6.1f} ms ({note}): "
+              f"quality={resp.quality} tiers={resp.meta.get('tier_path')}")
+
+    # §8 approximate mode is a first-class request parameter.
+    resp = svc.search_sync("demo", queries, k, target_recall=0.9)
+    print(f"target_recall=0.9: quality={resp.quality}")
+    print(f"stats: launches={svc.counters['launches']} "
+          f"tier mix=exact:{svc.counters['exact']} "
+          f"approx:{svc.counters['approx']} "
+          f"partial:{svc.counters['partial']} shed:{svc.counters['shed']}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -79,6 +80,52 @@ class BregmanFamily:
             # keep exp(x) in a sane range
             return jnp.clip(raw, -4.0, 4.0)
         return raw + self.sample_shift
+
+
+def validate_rows(family, rows, *, mode: str = "raise",
+                  what: str = "row"):
+    """Per-row domain gate: finite entries inside the family's OPEN domain.
+
+    A NaN/inf coordinate, or a non-positive entry under a positive-domain
+    generator (Itakura-Saito, Burg, Shannon), makes every downstream
+    quantity (UB totals, Theorem-3 bounds, refine distances) garbage
+    without any error — ``top_k`` over NaNs silently returns arbitrary
+    rows.  This is THE cheap admission gate shared by query validation
+    (``core.search.validate_queries``) and index-row quarantine
+    (``core.segments``): one elementwise compare + row reduction, O(q*d).
+
+    ``rows`` is (d,) or (q, d); returns a host-side (q,) bool ``ok`` mask
+    (scalar-shaped input returns shape (1,)).  ``mode="raise"`` raises a
+    ``ValueError`` naming the FIRST offending row; ``mode="mask"`` returns
+    the mask so callers (the retrieval service's degraded path) can shed
+    only the poisoned rows.  ``what`` names the rows in the error message.
+    """
+    fam = get_family(family) if isinstance(family, str) else family
+    if mode not in ("raise", "mask"):
+        raise ValueError(f"mode must be 'raise' or 'mask', got {mode!r}")
+    arr = np.asarray(rows)
+    if arr.ndim == 1:
+        arr = arr[None, :]
+    if arr.ndim != 2:
+        raise ValueError(f"expected (d,) or (q, d) {what}s, got {arr.shape}")
+    ok = np.isfinite(arr).all(axis=1)
+    lo, hi = fam.domain_low, fam.domain_high
+    with np.errstate(invalid="ignore"):
+        if np.isfinite(lo):
+            ok &= (arr > lo).all(axis=1)
+        if np.isfinite(hi):
+            ok &= (arr < hi).all(axis=1)
+    if mode == "raise" and not ok.all():
+        bad = int(np.argmax(~ok))
+        lo_s = f"{lo:g}" if np.isfinite(lo) else "-inf"
+        hi_s = f"{hi:g}" if np.isfinite(hi) else "inf"
+        raise ValueError(
+            f"{what} {bad} is invalid for Bregman family {fam.name!r}: "
+            f"entries must be finite and inside the open domain "
+            f"({lo_s}, {hi_s}); got {what} values "
+            f"min={np.nanmin(arr[bad]):g} max={np.nanmax(arr[bad]):g} "
+            f"finite={bool(np.isfinite(arr[bad]).all())}")
+    return ok
 
 
 def _squared_euclidean() -> BregmanFamily:

@@ -81,7 +81,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bregman import get_family
+from .bregman import get_family, validate_rows
 from .index import BallForest, ENV_BLOCK_ROWS
 from .transform import q_transform
 from . import bounds
@@ -131,6 +131,38 @@ class SearchResult(NamedTuple):
     dists: Array        # (k,) exact Bregman distances — (q, k) batched
     exact: Array        # () bool — candidate set fit in the budget; (q,) batched
     num_candidates: Array  # () int32 — Theorem-3 union size; (q,) batched
+
+
+class BatchStats(NamedTuple):
+    """Structured retry telemetry from :func:`knn_batch`.
+
+    The budget-escalation path used to announce itself only through a log
+    line; services and benchmarks alert on THESE counters instead of
+    scraping logs (``escalations`` growing under load means the default
+    budget is undersized; ``escalated_to_scan`` should be ~never).
+    """
+
+    escalations: int        # budget-growth retries taken (0 = first try fit)
+    budget_final: int       # the budget the returned launch ran with
+    escalated_to_scan: bool  # cap exhausted -> full linear-scan fallback
+    stopped_early: bool      # a stop_retry deadline ended the ladder
+
+
+def validate_queries(measure, q, *, mode: str = "raise"):
+    """Admission gate: reject NaN / out-of-domain query rows up front.
+
+    ``knn_search``/``knn_search_batch`` math silently returns garbage for a
+    query outside the generator's open domain (a non-positive entry under
+    Itakura-Saito/Burg/Shannon, any NaN/inf anywhere): the UB matmul and
+    the refine kernel both produce NaNs that ``top_k`` resolves to
+    arbitrary rows with ``exact=True``.  This host-side gate is one
+    elementwise pass over the (q, d) block.  ``mode="raise"`` names the
+    first offending row; ``mode="mask"`` returns a (q,) bool ``ok`` mask
+    for callers that degrade per row instead of failing the whole block
+    (serve/retrieval.py sheds exactly the flagged rows).  ``measure`` is a
+    family name or :class:`~repro.core.bregman.BregmanFamily`.
+    """
+    return validate_rows(measure, q, mode=mode, what="query row")
 
 
 def query_struct(y: Array, partition, family) -> dict:
@@ -298,9 +330,13 @@ def _knn_search_jit(index: BallForest, y: Array, k: int,
                         num_candidates=num_candidates)
 
 
-def knn_search(index, y: Array, k: int, budget: int) -> SearchResult:
+def knn_search(index, y: Array, k: int, budget: int,
+               validate: bool = True) -> SearchResult:
     """Exact kNN for one query (static budget; accepts a mutable index)."""
-    return _knn_search_jit(_as_forest(index, k), y, k, budget)
+    index = _as_forest(index, k)
+    if validate:
+        validate_queries(index.family, y)
+    return _knn_search_jit(index, y, k, budget)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
@@ -342,10 +378,13 @@ def _knn_search_approx_jit(
 
 
 def knn_search_approx(index, y: Array, k: int, budget: int,
-                      p_guarantee: Array) -> SearchResult:
+                      p_guarantee: Array,
+                      validate: bool = True) -> SearchResult:
     """§8 approximate kNN for one query (accepts a mutable index)."""
-    return _knn_search_approx_jit(_as_forest(index, k), y, k, budget,
-                                  p_guarantee)
+    index = _as_forest(index, k)
+    if validate:
+        validate_queries(index.family, y)
+    return _knn_search_approx_jit(index, y, k, budget, p_guarantee)
 
 
 def _cdf_shrink(samples: Array, mu: Array, kappa: Array, p: Array) -> Array:
@@ -751,9 +790,12 @@ def _knn_search_batch_jit(index: BallForest, ys: Array, k: int, budget: int,
 
 
 def knn_search_batch(index, ys: Array, k: int, budget: int,
-                     block_rows: int | None = None) -> SearchResult:
+                     block_rows: int | None = None,
+                     validate: bool = True) -> SearchResult:
     """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
     index = _as_forest(index, k)
+    if validate:
+        validate_queries(index.family, ys)
     return _knn_search_batch_jit(index, ys, k, budget,
                                  resolve_block_rows(block_rows, index.n))
 
@@ -769,10 +811,12 @@ def _knn_search_batch_approx_jit(
 
 def knn_search_batch_approx(
     index, ys: Array, k: int, budget: int, p_guarantee: Array,
-    block_rows: int | None = None,
+    block_rows: int | None = None, validate: bool = True,
 ) -> SearchResult:
     """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q."""
     index = _as_forest(index, k)
+    if validate:
+        validate_queries(index.family, ys)
     return _knn_search_batch_approx_jit(index, ys, k, budget, p_guarantee,
                                         resolve_block_rows(block_rows,
                                                            index.n))
@@ -897,16 +941,17 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
     """
     index = _as_forest(index, k)
     y = jnp.asarray(y, jnp.float32)
+    validate_queries(index.family, y)
     # Clamp explicit budgets: a pinned budget can outlive a compaction that
     # shrank the index (serve/knnlm.py), and top_k(priority, budget) needs
     # budget <= n.
     budget = min(budget, index.n) if budget else default_budget(index, k)
     while True:
         if approx_p is None:
-            res = knn_search(index, y, k, budget)
+            res = knn_search(index, y, k, budget, validate=False)
         else:
             res = knn_search_approx(index, y, k, budget,
-                                    jnp.float32(approx_p))
+                                    jnp.float32(approx_p), validate=False)
         if bool(res.exact) or budget >= index.n:
             return res
         budget = min(index.n, budget * 2)
@@ -915,7 +960,9 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
 def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
               approx_p: float | None = None, *,
               max_doublings: int = MAX_BUDGET_DOUBLINGS,
-              block_rows: int | None = None) -> SearchResult:
+              block_rows: int | None = None,
+              stop_retry=None, return_stats: bool = False,
+              validate: bool = True):
     """Batched kNN via the fused :func:`knn_search_batch` pipeline.
 
     One retry policy for the whole batch: if ANY query's Theorem-3 union
@@ -931,28 +978,58 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     ``block_rows`` tunes the streaming scans' block size (peak memory vs
     scan overhead — :func:`resolve_block_rows`); it is forwarded to every
     retry, so one setting governs the whole call.
+
+    **Deadline-capped ladder**: ``stop_retry`` (no-arg callable -> bool) is
+    consulted before every ADDITIONAL launch — each budget-growth retry
+    and the final scan escalation.  Returning True ends the ladder
+    immediately with the best result so far (rows whose union overflowed
+    keep ``exact=False`` — a budget-capped PARTIAL result), instead of
+    doubling forever past a deadline.  serve/retrieval.py passes
+    ``lambda: clock() + est_launch > deadline`` here; the default ``None``
+    preserves the always-exact contract.
+
+    ``return_stats=True`` returns ``(SearchResult, BatchStats)`` — the
+    structured escalation counters services and benchmarks alert on
+    (the log line is advisory only).
     """
     index = _as_forest(index, k)
     ys = jnp.asarray(ys, jnp.float32)
     if ys.ndim != 2:
         raise ValueError(f"knn_batch wants (q, d) queries, got {ys.shape}")
+    if validate:
+        validate_queries(index.family, ys)
     # Same clamp as knn: pinned budgets survive compactions that shrink n.
     budget = min(budget, index.n) if budget else default_budget(index, k)
     p = None if approx_p is None else jnp.float32(approx_p)
 
     def run(b):
         if p is None:
-            return knn_search_batch(index, ys, k, b, block_rows)
-        return knn_search_batch_approx(index, ys, k, b, p, block_rows)
+            return knn_search_batch(index, ys, k, b, block_rows,
+                                    validate=False)
+        return knn_search_batch_approx(index, ys, k, b, p, block_rows,
+                                       validate=False)
+
+    def done(res, escalations, scan=False, stopped=False):
+        stats = BatchStats(escalations=escalations, budget_final=budget,
+                           escalated_to_scan=scan, stopped_early=stopped)
+        return (res, stats) if return_stats else res
 
     for attempt in range(max_doublings + 1):
         res = run(budget)
         if bool(jnp.all(res.exact)) or budget >= index.n:
-            return res
+            return done(res, attempt)
         if attempt == max_doublings:
             break
+        if stop_retry is not None and stop_retry():
+            # Deadline exhausted: hand back the budget-capped partial
+            # result (overflowed rows keep exact=False) instead of
+            # launching again.
+            return done(res, attempt, stopped=True)
         # needed > budget on overflow, so the fitted budget strictly grows.
         budget = fitted_budget(index, k, int(jnp.max(res.num_candidates)))
+    escalations = max_doublings
+    if stop_retry is not None and stop_retry():
+        return done(res, escalations, stopped=True)
     logger.warning(
         "knn_batch: budget cap exhausted after %d doublings (budget=%d, "
         "%d/%d queries overflowed); escalating to a full linear scan "
@@ -963,9 +1040,10 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     # no per-query row gather.  num_candidates (budget-independent) comes
     # from the last capped run.
     ids, dists = _brute_force_live(index, ys, k)
-    return SearchResult(ids=ids, dists=dists,
-                        exact=jnp.ones(ys.shape[0], bool),
-                        num_candidates=res.num_candidates)
+    res = SearchResult(ids=ids, dists=dists,
+                       exact=jnp.ones(ys.shape[0], bool),
+                       num_candidates=res.num_candidates)
+    return done(res, escalations, scan=True)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

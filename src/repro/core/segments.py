@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .bregman import BregmanFamily
+from .bregman import BregmanFamily, validate_rows
 from .clustering import cluster_stats, pairwise_bregman
 from .index import (
     BallForest,
@@ -233,7 +233,8 @@ class SegmentedForest:
 
     # -- mutations ----------------------------------------------------------
 
-    def insert(self, points, *, auto_compact: bool = True) -> np.ndarray:
+    def insert(self, points, *, auto_compact: bool = True,
+               validate: bool = False) -> np.ndarray:
         """Append ``points`` as a new searchable segment; returns their ids.
 
         O(a * d * C) — one nearest-centroid pass against the sealed
@@ -241,7 +242,17 @@ class SegmentedForest:
         snapshot's row count changes, so the next search compiles a new
         program; batch inserts (and the auto-compact threshold) keep that
         churn bounded.
+
+        ``validate=True`` runs the domain gate
+        (:func:`~repro.core.bregman.validate_rows`) and raises — naming
+        the offending row — BEFORE anything is sealed, so a poisoned
+        ingest batch can never contaminate the searchable tables.
+        Ingestion paths that prefer quarantine-over-reject insert without
+        validation and call :meth:`quarantine` afterwards (or let the
+        serving layer do it — serve/retrieval.py).
         """
+        if validate:
+            validate_rows(self.family, points, what="insert row")
         seg = _append_segment(self.main, points, self.next_id)
         self.segments.append(seg)
         self.live.append(np.ones(seg.n, dtype=bool))
@@ -280,6 +291,46 @@ class SegmentedForest:
             if auto_compact and self.stale_fraction > self.compact_threshold:
                 self.compact()
         return removed
+
+    def find_invalid(self) -> np.ndarray:
+        """Original ids of LIVE rows that violate the family domain.
+
+        Scans what refine actually computes distances over —
+        ``rows_view()``, i.e. the decoded rows in the int8 tier — for
+        NaN/inf or open-domain violations (``bregman.validate_rows``).  A
+        poisoned row makes every query that admits it return NaN
+        distances, so this is the index-side admission check the serving
+        layer runs before trusting a tenant's index (and after any
+        unvalidated bulk load).
+        """
+        blocks = [self.main] + self.segments
+        bad: list[np.ndarray] = []
+        for b, mask in zip(blocks, self.live):
+            if not mask.any():
+                continue
+            rows = np.asarray(b.rows_view())
+            ok = validate_rows(self.family, rows, mode="mask")
+            bad_rows = mask & ~ok
+            if bad_rows.any():
+                bad.append(np.asarray(b.point_ids)[bad_rows])
+        if not bad:
+            return np.empty((0,), np.int32)
+        return np.concatenate(bad).astype(np.int32)
+
+    def quarantine(self) -> np.ndarray:
+        """Tombstone every domain-violating live row; returns their ids.
+
+        The poisoned-index containment path: rows found by
+        :meth:`find_invalid` become search-inert tombstones (exactly like
+        :meth:`delete`, but auto-compaction is suppressed so the caller
+        controls when the reclaim pause happens).  Searches over the
+        remaining live set are exact again; the returned ids let the
+        owner audit or re-ingest corrected rows.
+        """
+        bad = self.find_invalid()
+        if bad.size:
+            self.delete(bad, auto_compact=False)
+        return bad
 
     # -- compaction ---------------------------------------------------------
 

@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -64,6 +65,24 @@ from . import sharding as shd
 Array = jax.Array
 
 _QS_FIELDS = ("qconst", "sqrt_delta", "grad", "c_y")
+
+
+class LaunchTimeout(TimeoutError):
+    """A distributed launch blocked past its ``launch_timeout_s``.
+
+    Raised AFTER the launch completes (an in-flight XLA program cannot be
+    preempted), so the timeout is cooperative: it bounds how long a slow
+    shard can silently inflate tail latency before the caller learns about
+    it.  serve/retrieval.py treats it as a circuit-breaker failure and
+    degrades the tenant rather than retrying blindly.  The completed
+    result rides on the exception (:attr:`result`, :attr:`elapsed_s`) so
+    callers that still meet their deadline may choose to use it.
+    """
+
+    def __init__(self, msg: str, result=None, elapsed_s: float = 0.0):
+        super().__init__(msg)
+        self.result = result
+        self.elapsed_s = elapsed_s
 
 
 class QueryView(NamedTuple):
@@ -239,7 +258,10 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
                     budget: int, mesh: Mesh | None = None,
                     approx_p: float | None = None,
                     block_rows: int | None = None,
-                    max_doublings: int = MAX_BUDGET_DOUBLINGS) -> SearchResult:
+                    max_doublings: int = MAX_BUDGET_DOUBLINGS,
+                    launch_timeout_s: float | None = None,
+                    launch_hook=None, stop_retry=None,
+                    clock=time.monotonic) -> SearchResult:
     """Batched kNN over a sharded index — the distributed ``knn_batch``.
 
     ``queries`` is a (q, d) block or a prebuilt :class:`QueryView`;
@@ -252,6 +274,18 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     per-shard union (same power-of-two rule as the single-host wrapper);
     the loop ends at ``budget == local_n`` where the union always fits, so
     exact mode stays exact and ``exact`` is always truthful.
+
+    **Robustness wiring** (serve/retrieval.py): every retry is its own
+    blocking LAUNCH.  ``launch_hook(elapsed_s)`` observes each launch's
+    wall time (feeding the service's cost model); ``launch_timeout_s``
+    raises :class:`LaunchTimeout` — carrying the completed result — when
+    a launch blocks longer than that (a cooperative, post-hoc timeout: a
+    running XLA program cannot be preempted, so this bounds DETECTION
+    latency, not the launch itself).  ``stop_retry`` (no-arg -> bool) is
+    consulted before each ADDITIONAL launch, exactly like
+    ``core.search.knn_batch``: True returns the budget-capped partial
+    result (overflowed queries keep ``exact=False``) instead of retrying
+    past a deadline.  ``clock`` is injectable for deterministic tests.
     """
     mesh = mesh or sharded.mesh
     forest = sharded.forest
@@ -275,9 +309,22 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
                                  forest.partition, forest.num_clusters,
                                  forest.storage, k, b,
                                  block_rows, approx_p is not None)
-        ids, dists, exact, ncand, need = prog(arrs, qv.y, qv.sub, *extra)
+        t0 = clock()
+        out = jax.block_until_ready(prog(arrs, qv.y, qv.sub, *extra))
+        elapsed = clock() - t0
+        if launch_hook is not None:
+            launch_hook(elapsed)
+        ids, dists, exact, ncand, need = out
+        res = SearchResult(ids=ids, dists=dists, exact=exact,
+                           num_candidates=ncand)
+        if launch_timeout_s is not None and elapsed > launch_timeout_s:
+            raise LaunchTimeout(
+                f"distributed_knn launch (budget={b}, attempt={attempt}) "
+                f"blocked {elapsed:.3f}s > launch_timeout_s="
+                f"{launch_timeout_s:.3f}s", result=res, elapsed_s=elapsed)
         if bool(jnp.all(exact)) or b >= local_n or attempt == max_doublings:
             break
+        if stop_retry is not None and stop_retry():
+            break
         b = fitted_budget_for_n(local_n, k, int(jnp.max(need)))
-    return SearchResult(ids=ids, dists=dists, exact=exact,
-                        num_candidates=ncand)
+    return res

@@ -1,2 +1,29 @@
-# Serving substrate: batched prefill/decode engine + the BrePartition
-# kNN-LM datastore integration (the paper's technique at the serving layer).
+# Serving substrate: batched prefill/decode engine, the BrePartition
+# kNN-LM datastore integration (the paper's technique at the serving
+# layer), and the fault-tolerant retrieval front end (deadlines,
+# admission control, degradation ladder) with its fault-injection
+# harness.
+
+from .faults import (  # noqa: F401
+    CompactDuringSearch,
+    FaultEvent,
+    FaultPlan,
+    InjectedLaunchError,
+    LatencySpike,
+    LaunchError,
+    OffsetClock,
+    PoisonQuery,
+    ShardStall,
+    SystemClock,
+    VirtualClock,
+    jittered_backoff,
+)
+from .retrieval import (  # noqa: F401
+    CircuitBreaker,
+    LaunchCostModel,
+    RetrievalResponse,
+    RetrievalService,
+    ServiceConfig,
+    Tenant,
+    Ticket,
+)

@@ -160,12 +160,53 @@ class KNNLMHook:
     approx_p: float | None = None   # paper §8 approximate mode
     budget: int | None = None       # pinned refine budget (stable jit cache)
     block_rows: int | None = None   # streaming block size (None -> store's)
+    # Optional robustness front end (serve/retrieval.py).  When set, every
+    # lookup routes through the service's admission gate + degradation
+    # ladder under ``deadline_s``: the store is (re-)registered as tenant
+    # ``service_tenant`` whenever ``store.version`` moves, and rows the
+    # service degraded past approx (partial/shed) fall back to the pure LM
+    # distribution — a slow or faulty datastore costs retrieval quality,
+    # never decode liveness.  Unset, lookups call knn_batch directly (the
+    # bare-metal path: no deadlines, but also no service in the loop).
+    service: object = None          # RetrievalService | None
+    service_tenant: str = "knnlm"
+    deadline_s: float | None = None
     queries_served: int = 0
+    # Structured budget-retry telemetry (replaces grepping logs): total
+    # budget escalations taken, full linear-scan fallbacks, and the budget
+    # the most recent launch actually ran with.
+    escalations: int = 0
+    scan_fallbacks: int = 0
+    budget_final: int = 0
     # next_tokens cached on device (lazy, refreshed when the store mutates)
     _next_dev: Array | None = dataclasses.field(
         default=None, init=False, repr=False)
     _next_version: int = dataclasses.field(
         default=-1, init=False, repr=False)
+    _svc_version: int = dataclasses.field(
+        default=-1, init=False, repr=False)
+
+    def _service_lookup(self, h: np.ndarray):
+        """Route one lookup through the retrieval service.
+
+        Returns ``(ids, dists, use_rows)`` or None for "serve pure LM".
+        ``use_rows`` keeps exact/approx rows; partial and shed rows fall
+        back to the LM distribution (a truncated neighbor set would bias
+        the mixture — the same policy as the inexact-row gate below).
+        """
+        svc = self.service
+        name = self.service_tenant
+        if name not in svc.tenants or self._svc_version != self.store.version:
+            # (Re-)register on every store mutation: the service revalidates
+            # the live rows and refreshes its tenant record.
+            svc.register_tenant(name, self.store.index)
+            self._svc_version = self.store.version
+        resp = svc.search_sync(name, h, self.k, deadline_s=self.deadline_s,
+                               target_recall=self.approx_p)
+        use = np.array([q in ("exact", "approx") for q in resp.row_quality])
+        if not use.any():
+            return None
+        return resp.ids, resp.dists, use
 
     def __call__(self, logits: Array, hidden: Array | None) -> Array:
         if hidden is None:
@@ -177,56 +218,71 @@ class KNNLMHook:
         if live < self.k:
             return logits
         h = jnp.asarray(hidden, jnp.float32)
-        # The engine hands the LIVE rows (A, D) at every sampling step —
-        # active slots on decode ticks, admitted slots on the prefill
-        # path; dead slots' garbage rows never reach retrieval — so each
-        # step is ONE fused knn_search_batch program: one filter matmul,
-        # one prune, one refine for all sampled slots.  Pinning the budget
-        # keeps the refine shape stable; the batch axis still varies with
-        # the live-slot count (bounded by the engine's slot pool, so the
-        # jit cache holds at most `slots` programs per k).  Rare union
-        # overflows fall back to the capped sized retry.
-        res = bp_search.knn_batch(self.store.index, h, self.k,
-                                  budget=self.budget,
-                                  approx_p=self.approx_p,
-                                  block_rows=(self.block_rows
-                                              or self.store.block_rows))
-        self.queries_served += int(h.shape[0])
-        # Grow-only budget adaptation: only when this step's unions outgrew
-        # the effective budget (no pin is installed while the default
-        # suffices — one program, no mid-serving recompile).  On overflow
-        # the pin uses the shared fitted_budget sizing so it lands on the
-        # same static shapes knn_batch's retries compile.  The pin is
-        # bounded: one pathological row (a stale slot's hidden state, a
-        # degenerate union ~ n) must not permanently inflate every future
-        # step's refine gather to (B, n, d) — beyond the (power-of-two
-        # aligned) cap we accept the occasional retry instead.
-        default = bp_search.default_budget(self.store.index, self.k)
-        needed = int(jnp.max(res.num_candidates))
-        current = self.budget or default
-        if needed > current:
-            cap = bp_search.fitted_budget(self.store.index, self.k,
-                                          8 * default)
-            fitted = bp_search.fitted_budget(self.store.index, self.k,
-                                             needed)
-            self.budget = max(current, min(fitted, cap))  # never shrink
+        if self.service is not None:
+            out = self._service_lookup(np.asarray(h))
+            self.queries_served += int(h.shape[0])
+            if out is None:
+                return logits
+            ids, dists, use = out
+            ids = jnp.asarray(np.maximum(ids, 0))      # shed rows hold -1
+            dists = jnp.asarray(np.where(use[:, None], dists, 0.0))
+            use = jnp.asarray(use)
+        else:
+            # The engine hands the LIVE rows (A, D) at every sampling step —
+            # active slots on decode ticks, admitted slots on the prefill
+            # path; dead slots' garbage rows never reach retrieval — so each
+            # step is ONE fused knn_search_batch program: one filter matmul,
+            # one prune, one refine for all sampled slots.  Pinning the
+            # budget keeps the refine shape stable; the batch axis still
+            # varies with the live-slot count (bounded by the engine's slot
+            # pool, so the jit cache holds at most `slots` programs per k).
+            # Rare union overflows fall back to the capped sized retry.
+            res, stats = bp_search.knn_batch(
+                self.store.index, h, self.k, budget=self.budget,
+                approx_p=self.approx_p,
+                block_rows=(self.block_rows or self.store.block_rows),
+                return_stats=True)
+            self.queries_served += int(h.shape[0])
+            self.escalations += stats.escalations
+            self.scan_fallbacks += int(stats.escalated_to_scan)
+            self.budget_final = stats.budget_final
+            # Grow-only budget adaptation: only when this step's unions
+            # outgrew the effective budget (no pin is installed while the
+            # default suffices — one program, no mid-serving recompile).  On
+            # overflow the pin uses the shared fitted_budget sizing so it
+            # lands on the same static shapes knn_batch's retries compile.
+            # The pin is bounded: one pathological row (a stale slot's
+            # hidden state, a degenerate union ~ n) must not permanently
+            # inflate every future step's refine gather to (B, n, d) —
+            # beyond the (power-of-two aligned) cap we accept the
+            # occasional retry instead.
+            default = bp_search.default_budget(self.store.index, self.k)
+            needed = int(jnp.max(res.num_candidates))
+            current = self.budget or default
+            if needed > current:
+                cap = bp_search.fitted_budget(self.store.index, self.k,
+                                              8 * default)
+                fitted = bp_search.fitted_budget(self.store.index, self.k,
+                                                 needed)
+                self.budget = max(current, min(fitted, cap))  # never shrink
+            # Defense in depth: knn_batch escalates to a full refine on cap
+            # exhaustion so inexact rows shouldn't occur, but if one ever
+            # does its neighbors are an arbitrary union prefix — serve the
+            # pure LM distribution for it instead of a biased mixture.
+            ids, dists, use = res.ids, res.dists, res.exact
         # Upload the value table once per store version, not per tick; a
         # grow/evict bumps store.version and forces a re-upload so appended
         # ids resolve and evicted ids (which never surface) age out.
         if self._next_dev is None or self._next_version != self.store.version:
             self._next_dev = jnp.asarray(self.store.next_tokens)
             self._next_version = self.store.version
-        knn_tokens = self._next_dev[res.ids]                        # (B, k)
-        w = jax.nn.softmax(-res.dists / self.temperature, axis=-1)  # (B, k)
+        knn_tokens = self._next_dev[ids]                        # (B, k)
+        w = jax.nn.softmax(-dists / self.temperature, axis=-1)  # (B, k)
         vocab = logits.shape[-1]
         p_knn = jax.vmap(
             lambda t, ww: jnp.zeros((vocab,), jnp.float32).at[t].add(ww)
         )(knn_tokens, w)
         p_lm = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         mix = (1.0 - self.lam) * p_lm + self.lam * p_knn
-        # Defense in depth: knn_batch escalates to a full refine on cap
-        # exhaustion so inexact rows shouldn't occur, but if one ever does
-        # its neighbors are an arbitrary union prefix — serve the pure LM
-        # distribution for it instead of a biased mixture.
-        mix = jnp.where(res.exact[:, None], mix, p_lm)
+        mix = jnp.where(use[:, None], mix, p_lm)
         return jnp.log(jnp.maximum(mix, 1e-30))

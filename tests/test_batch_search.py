@@ -166,6 +166,9 @@ def test_knnlm_hook_mixes_and_gates_on_exact(monkeypatch):
 
     def inexact_knn(*args, **kwargs):
         res = real(*args, **kwargs)
+        if kwargs.get("return_stats"):
+            res, stats = res
+            return res._replace(exact=jnp.zeros_like(res.exact)), stats
         return res._replace(exact=jnp.zeros_like(res.exact))
 
     monkeypatch.setattr(knnlm_mod.bp_search, "knn_batch", inexact_knn)

@@ -1,0 +1,357 @@
+"""Robustness contract of serve/retrieval.py under seeded fault injection.
+
+Every test runs on a VirtualClock: real launches take zero virtual time,
+so latency exists exactly where a fault injects it and each scenario is
+deterministic and replayable from its FaultPlan seed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import search as bp
+from repro.core.bregman import get_family, validate_rows
+from repro.core.search import validate_queries
+from repro.core.segments import build_segmented_index
+from repro.serve.faults import (
+    CompactDuringSearch,
+    FaultPlan,
+    LatencySpike,
+    LaunchError,
+    PoisonQuery,
+    VirtualClock,
+)
+from repro.serve.retrieval import RetrievalService, ServiceConfig
+
+N, D, K = 400, 16, 5
+SPIKE = 0.3     # injected seconds per launch in the latency tests
+
+
+def make_index(seed=0, n=N):
+    rng = np.random.default_rng(seed)
+    data = rng.random((n, D)).astype(np.float32) + 0.1
+    return build_segmented_index(data, "shannon", m=4)
+
+
+@pytest.fixture(scope="module")
+def index():
+    return make_index()
+
+
+@pytest.fixture(scope="module")
+def queries():
+    rng = np.random.default_rng(7)
+    return rng.random((4, D)).astype(np.float32) + 0.1
+
+
+def oracle(index, queries, k=K):
+    """Fault-free exact reference over the CURRENT live rows."""
+    snap = bp._as_forest(index)
+    return bp.knn_search_batch(snap, queries, k, snap.n)
+
+
+def make_service(index, *, faults=None, **cfg):
+    clock = VirtualClock()
+    svc = RetrievalService(ServiceConfig(**cfg), clock=clock, faults=faults)
+    svc.register_tenant("t", index)
+    return svc, clock
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_honored_under_latency(index, queries):
+    """No response exceeds its deadline by more than ONE launch — the
+    documented guarantee (a running XLA launch cannot be preempted)."""
+    plan = FaultPlan([LatencySpike(SPIKE)], seed=1)
+    svc, clock = make_service(index, faults=plan, default_deadline_s=0.5)
+    for _ in range(6):
+        r = svc.search_sync("t", queries, K)
+        assert r.latency_s <= 0.5 + SPIKE + 1e-6
+        if r.quality != "shed":
+            assert r.deadline_met or r.latency_s - 0.5 <= SPIKE + 1e-6
+    assert svc.counters["launches"] == len(plan.fired("latency"))
+
+
+def test_ladder_degrades_as_cost_rises(index, queries):
+    """Once the cost model knows a launch costs SPIKE, tighter deadlines
+    walk down the ladder: exact -> approx -> partial -> shed."""
+    plan = FaultPlan([LatencySpike(SPIKE)], seed=1)
+    svc, clock = make_service(index, faults=plan)
+    svc.search_sync("t", queries, K)          # teach the cost model
+    assert svc.tenants["t"].cost.estimate() >= SPIKE
+
+    # exact needs exact_margin(2.0) * est headroom
+    r = svc.search_sync("t", queries, K, deadline_s=2.5 * SPIKE)
+    assert r.meta["tier_path"][0] == "exact"
+    # approx fits in [1.0, 2.0) * est
+    r = svc.search_sync("t", queries, K, deadline_s=1.5 * SPIKE)
+    assert r.meta["tier_path"][0] == "approx"
+    # partial fits in [0.5, 1.0) * est
+    r = svc.search_sync("t", queries, K, deadline_s=0.8 * SPIKE)
+    assert r.meta["tier_path"][0] == "partial"
+    # below partial_margin * est: shed WITHOUT launching
+    before = svc.counters["launches"]
+    r = svc.search_sync("t", queries, K, deadline_s=0.3 * SPIKE)
+    assert r.quality == "shed" and r.shed_reason == "deadline"
+    assert svc.counters["launches"] == before
+
+
+def test_expired_requests_shed_without_launch(index, queries):
+    svc, clock = make_service(index)
+    ticket = svc.submit("t", queries, K, deadline_s=0.1)
+    clock.advance(0.2)                        # deadline passes while queued
+    svc.step()
+    assert ticket.done and ticket.response.quality == "shed"
+    assert ticket.response.shed_reason == "deadline"
+    assert svc.counters["launches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_full_returns_retry_after(index, queries):
+    svc, _ = make_service(index, queue_depth=2)
+    t1 = svc.submit("t", queries, K)
+    t2 = svc.submit("t", queries, K)
+    t3 = svc.submit("t", queries, K)          # bounced: queue is full
+    assert not t1.done and not t2.done
+    assert t3.done and t3.response.quality == "shed"
+    assert t3.response.shed_reason == "queue_full"
+    assert t3.response.retry_after is not None and t3.response.retry_after > 0
+    assert svc.counters["rejected_queue_full"] == 1
+    svc.run_until_drained()
+    assert t1.done and t2.done
+
+
+def test_bad_k_rejected_up_front(index, queries):
+    svc, _ = make_service(index)
+    t = svc.submit("t", queries, index.live_n + 1)
+    assert t.done and t.response.quality == "shed"
+    assert t.response.shed_reason == "bad_k"
+    assert "live_n" in t.response.error
+    assert svc.counters["launches"] == 0
+
+
+def test_microbatching_coalesces_requests(index, queries):
+    svc, _ = make_service(index)
+    tickets = [svc.submit("t", queries[i:i + 1], K) for i in range(3)]
+    svc.step()
+    assert all(t.done for t in tickets)
+    # 3 single-row requests -> ONE bucketed microbatch (plus possible
+    # budget retries, which relaunch the same block).
+    assert svc.counters["launches"] <= 2
+    ref = oracle(index, queries[:3])
+    for i, t in enumerate(tickets):
+        assert t.response.quality == "exact"
+        np.testing.assert_array_equal(t.response.ids[0],
+                                      np.asarray(ref.ids)[i])
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker + retry
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_half_opens_closes(index, queries):
+    plan = FaultPlan([LaunchError(at_launches=(0, 1))], seed=3)
+    svc, clock = make_service(index, faults=plan, breaker_threshold=2,
+                              breaker_cooldown_s=1.0)
+    brk = svc.tenants["t"].breaker
+
+    # Two injected failures: retry with backoff, then the breaker opens.
+    r1 = svc.search_sync("t", queries, K)
+    assert r1.quality == "shed" and r1.shed_reason == "launch_failed"
+    assert "InjectedLaunchError" in r1.error
+    assert brk.state == "open" and brk.opens == 1
+
+    # While open: shed with a retry_after hint, no launches.
+    before = svc.counters["launches"]
+    r2 = svc.search_sync("t", queries, K)
+    assert r2.shed_reason == "breaker_open"
+    assert 0 < r2.retry_after <= 1.0
+    assert svc.counters["launches"] == before
+
+    # After the cooldown: one half-open probe, which succeeds and closes.
+    clock.advance(1.1)
+    r3 = svc.search_sync("t", queries, K)
+    assert r3.quality == "exact"
+    assert brk.state == "closed"
+    np.testing.assert_array_equal(r3.ids, np.asarray(oracle(index,
+                                                            queries).ids))
+
+
+def test_transient_failure_retried_within_deadline(index, queries):
+    plan = FaultPlan([LaunchError(at_launches=0)], seed=4)
+    svc, _ = make_service(index, faults=plan, breaker_threshold=3)
+    r = svc.search_sync("t", queries, K)
+    assert r.quality == "exact"               # retry after backoff succeeded
+    assert svc.counters["launch_failures"] == 1
+    assert r.latency_s > 0                    # the jittered backoff slept
+
+
+# ---------------------------------------------------------------------------
+# Poison containment
+# ---------------------------------------------------------------------------
+
+def test_poisoned_query_degrades_only_its_row(index, queries):
+    plan = FaultPlan([PoisonQuery(at_submits=0, row=1)], seed=5)
+    svc, _ = make_service(index, faults=plan)
+    r = svc.search_sync("t", queries, K)
+    assert plan.fired("poison")
+    assert r.flagged_rows == [1]
+    assert r.row_quality[1] == "shed"
+    assert (r.ids[1] == -1).all() and np.isinf(r.dists[1]).all()
+    # The batchmates are untouched AND still exact vs the oracle.
+    ref = np.asarray(oracle(index, queries).ids)
+    for i in (0, 2, 3):
+        assert r.row_quality[i] == "exact"
+        np.testing.assert_array_equal(r.ids[i], ref[i])
+    assert r.quality == "exact"               # headline = worst VALID row
+
+
+def test_poisoned_index_rows_quarantined_at_register():
+    idx = make_index(seed=11, n=200)
+    bad = np.full((2, D), 0.5, np.float32)
+    bad[0, 3] = np.nan
+    bad[1, 5] = -1.0                          # shannon domain is x > 0
+    bad_ids = idx.insert(bad, auto_compact=False)
+    svc, _ = make_service(idx)
+    tenant = svc.tenants["t"]
+    assert tenant.degraded
+    assert sorted(tenant.quarantined) == sorted(bad_ids)
+    q = np.random.default_rng(2).random((2, D)).astype(np.float32) + 0.1
+    r = svc.search_sync("t", q, K)
+    assert r.quality == "exact" and r.tenant_degraded
+    assert not np.isin(r.ids, bad_ids).any()  # quarantined ids never surface
+
+
+# ---------------------------------------------------------------------------
+# Snapshot consistency under mutation
+# ---------------------------------------------------------------------------
+
+def test_compaction_during_search_is_snapshot_consistent(queries):
+    idx = make_index(seed=13, n=200)
+    n0 = idx.live_n
+    plan = FaultPlan([CompactDuringSearch(at_launches=0, insert_rows=8)],
+                     seed=6)
+    svc, _ = make_service(idx, faults=plan, record_snapshots=True)
+    r = svc.search_sync("t", queries, K)
+    assert plan.fired("compact")
+    assert idx.live_n == n0 + 8               # the race really happened
+    # Results are bit-identical to searching the pre-mutation snapshot
+    # with the same final budget (queries.shape[0] == bucket, no padding).
+    snap = r.meta["snapshot"]
+    assert snap.n == n0
+    ref = bp.knn_search_batch(snap, queries, K, r.meta["budget"])
+    np.testing.assert_array_equal(r.ids, np.asarray(ref.ids))
+    np.testing.assert_array_equal(r.dists, np.asarray(ref.dists))
+
+
+# ---------------------------------------------------------------------------
+# Quality labels are truthful in all four tiers
+# ---------------------------------------------------------------------------
+
+def test_quality_exact_matches_oracle(index, queries):
+    svc, _ = make_service(index)
+    r = svc.search_sync("t", queries, K)
+    assert r.quality == "exact"
+    np.testing.assert_array_equal(r.ids, np.asarray(oracle(index,
+                                                           queries).ids))
+
+
+def test_quality_approx_labels_approx_pipeline(index, queries):
+    svc, _ = make_service(index)
+    r = svc.search_sync("t", queries, K, target_recall=0.9)
+    assert r.meta["tier_path"][0] == "approx"
+    # §8 results must NEVER claim "exact", however complete they look.
+    assert r.quality == "approx"
+    assert all(q in ("approx", "partial") for q in r.row_quality)
+
+
+def test_quality_partial_when_deadline_caps_retries(index, queries):
+    # The seed data overflows the default budget (the exact tier needs a
+    # budget retry); a deadline that affords exactly one launch caps the
+    # ladder there, and the overflowed rows must come back "partial".
+    stats_probe = bp.knn_batch(bp._as_forest(index), queries, K,
+                               return_stats=True)[1]
+    assert stats_probe.escalations >= 1       # scenario precondition
+    plan = FaultPlan([LatencySpike(SPIKE)], seed=8)
+    # exact_margin=1.0: the exact tier is entered as soon as ONE launch
+    # fits, so a 1.2-launch deadline admits the first launch and the
+    # stop_retry gate then caps the budget ladder after it.
+    svc, _ = make_service(index, faults=plan, exact_margin=1.0)
+    svc.tenants["t"].cost.observe(SPIKE)      # pre-trained cost model
+    r = svc.search_sync("t", queries, K, deadline_s=1.2 * SPIKE)
+    assert r.meta["tier_path"] == ["exact"]
+    assert r.quality == "partial"             # capped, and says so
+    assert any(q == "partial" for q in r.row_quality)
+    # Rows still labeled exact really are exact.
+    ref = np.asarray(oracle(index, queries).ids)
+    for i, q in enumerate(r.row_quality):
+        if q == "exact":
+            np.testing.assert_array_equal(r.ids[i], ref[i])
+
+
+def test_quality_shed_is_explicit(index, queries):
+    svc, _ = make_service(index)
+    svc.tenants["t"].cost.observe(1.0)
+    r = svc.search_sync("t", queries, K, deadline_s=0.01)
+    assert r.quality == "shed" and r.shed_reason == "deadline"
+    assert (r.ids == -1).all() and np.isinf(r.dists).all()
+    assert svc.counters["shed"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Satellite: structured escalation stats + query validation
+# ---------------------------------------------------------------------------
+
+def test_knn_batch_returns_structured_stats(index, queries):
+    snap = bp._as_forest(index)
+    res, stats = bp.knn_batch(snap, queries, K, return_stats=True)
+    assert bool(np.asarray(res.exact).all())
+    assert stats.escalations >= 1             # this data overflows (above)
+    assert stats.budget_final >= bp.default_budget(snap, K)
+    assert not stats.escalated_to_scan and not stats.stopped_early
+
+    # stop_retry=True before the first RETRY -> budget-capped partial.
+    res2, stats2 = bp.knn_batch(snap, queries, K, stop_retry=lambda: True,
+                                return_stats=True)
+    assert stats2.stopped_early and stats2.escalations == 0
+    assert not bool(np.asarray(res2.exact).all())
+
+
+def test_validate_queries_names_offending_row(index):
+    fam = get_family("shannon")
+    q = np.full((3, D), 0.5, np.float32)
+    q[2, 4] = np.nan
+    with pytest.raises(ValueError, match="row 2"):
+        validate_queries(fam, q)
+    q[2, 4] = -0.5                            # finite but out of domain
+    with pytest.raises(ValueError, match="row 2"):
+        validate_queries(fam, q)
+    mask = validate_queries(fam, q, mode="mask")
+    assert mask.tolist() == [True, True, False]
+    with pytest.raises(ValueError, match="row 2"):
+        bp.knn_search_batch(index, q, K, 64)
+
+
+def test_segments_insert_validation_and_quarantine():
+    idx = make_index(seed=17, n=200)
+    bad = np.full((1, D), 0.5, np.float32)
+    bad[0, 0] = np.nan
+    with pytest.raises(ValueError, match="insert row 0"):
+        idx.insert(bad, validate=True)
+    assert idx.find_invalid().size == 0       # the raise kept it out
+    (bid,) = idx.insert(bad, validate=False)  # simulated corruption
+    assert idx.find_invalid().tolist() == [bid]
+    assert idx.quarantine().tolist() == [bid]
+    assert idx.find_invalid().size == 0
+    assert bid not in idx.live_ids()
+
+
+def test_validate_rows_mask_matches_family_domain():
+    fam = get_family("squared_euclidean")
+    rows = np.array([[1.0, -2.0], [np.inf, 0.0]], np.float32)
+    mask = validate_rows(fam, rows, mode="mask")
+    assert mask.tolist() == [True, False]     # all-reals family: finite only

@@ -117,3 +117,46 @@ def test_knnlm_engine_end_to_end(bundle, params):
     done = eng.run(max_ticks=30)
     assert len(done) == 1 and len(done[0].output) == 4
     assert hook.queries_served >= 4
+
+
+def test_knnlm_hook_routes_through_service(bundle, params):
+    """service-routed lookups match the direct path when exact, and a
+    shedding service degrades to the pure LM distribution, not an error."""
+    from repro.serve.retrieval import RetrievalService, ServiceConfig
+
+    vocab = bundle.cfg.vocab_size
+    corpus = np.random.default_rng(0).integers(1, vocab, (4, 24))
+    store = build_datastore(bundle, params, corpus, m=4)
+    logits = jnp.zeros((2, vocab))
+    hidden = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, bundle.cfg.d_model)), jnp.float32)
+
+    direct = KNNLMHook(store=store, k=4, lam=0.5)
+    svc = RetrievalService(ServiceConfig())
+    routed = KNNLMHook(store=store, k=4, lam=0.5, service=svc,
+                       deadline_s=60.0)
+    np.testing.assert_allclose(np.asarray(routed(logits, hidden)),
+                               np.asarray(direct(logits, hidden)),
+                               rtol=1e-5, atol=1e-6)
+    assert svc.counters["exact"] >= 1
+    assert routed.service_tenant in svc.tenants
+
+    # Hopeless deadline: the service sheds, the hook serves pure LM.
+    svc.tenants[routed.service_tenant].cost.observe(10.0)
+    routed.deadline_s = 0.001
+    out = routed(logits, hidden)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(logits))
+    assert svc.counters["shed"] >= 1
+
+
+def test_knnlm_hook_exposes_escalation_stats(bundle, params):
+    corpus = np.random.default_rng(0).integers(
+        1, bundle.cfg.vocab_size, (4, 24))
+    store = build_datastore(bundle, params, corpus, m=4)
+    hook = KNNLMHook(store=store, k=4, lam=0.5)
+    hidden = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, bundle.cfg.d_model)), jnp.float32)
+    hook(jnp.zeros((2, bundle.cfg.vocab_size)), hidden)
+    assert hook.escalations >= 0
+    assert hook.budget_final >= 4          # >= k: the launch's real budget
+    assert hook.scan_fallbacks == 0
