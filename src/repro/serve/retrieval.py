@@ -113,6 +113,12 @@ class ServiceConfig:
     exact_margin: float = 2.0
     approx_margin: float = 1.0
     partial_margin: float = 0.5
+    # A microbatch runs on its TIGHTEST member's deadline, so coupling a
+    # fresh request to a nearly-expired one would degrade (or shed) the
+    # fresh one.  A request only joins a batch while the batch's
+    # max/min remaining-deadline ratio stays within this factor;
+    # incompatible requests wait for the next tick's batch instead.
+    deadline_spread: float = 2.0
     validate_index: bool = True     # quarantine poisoned rows at register
     record_snapshots: bool = False  # keep per-batch snapshot in meta (tests)
 
@@ -120,10 +126,16 @@ class ServiceConfig:
 class CircuitBreaker:
     """closed -> open (threshold consecutive failures) -> half-open -> ...
 
-    ``allow(now)`` answers "may a launch go out right now": an open
-    breaker says no until ``cooldown_s`` has passed, then admits exactly
-    ONE half-open probe; the probe's outcome closes or re-opens.  Success
-    in any state resets to closed.
+    ``allow(now)`` answers "may a launch go out right now" and is
+    SIDE-EFFECT-FREE: an open breaker says no until ``cooldown_s`` has
+    passed, then answers yes.  The open -> half_open transition happens in
+    ``begin_probe``, called only when a launch is ACTUALLY attempted — a
+    caller that asks permission and then sheds anyway (deadline ran out
+    between the check and the launch) leaves the breaker open with its
+    cooldown clock intact instead of wedging it in a probe-in-flight
+    state that nothing will ever resolve.  Half-open admits exactly one
+    probe; the probe's outcome closes or re-opens.  Success in any state
+    resets to closed.
     """
 
     def __init__(self, threshold: int = 3, cooldown_s: float = 2.0):
@@ -137,10 +149,14 @@ class CircuitBreaker:
     def allow(self, now: float) -> bool:
         if self.state == "closed":
             return True
-        if self.state == "open" and now - self.opened_at >= self.cooldown_s:
+        if self.state == "open":
+            return now - self.opened_at >= self.cooldown_s
+        return False                # half-open probe in flight
+
+    def begin_probe(self) -> None:
+        """A launch is going out while open: mark it as the probe."""
+        if self.state == "open":
             self.state = "half_open"
-            return True
-        return False                # open and cooling, or probe in flight
 
     def record_success(self) -> None:
         self.state = "closed"
@@ -155,9 +171,11 @@ class CircuitBreaker:
             self.opens += 1
 
     def retry_after(self, now: float) -> float:
-        if self.state != "open":
-            return 0.0
-        return max(0.0, self.opened_at + self.cooldown_s - now)
+        if self.state == "open":
+            return max(0.0, self.opened_at + self.cooldown_s - now)
+        if self.state == "half_open":
+            return self.cooldown_s  # probe in flight; retry after it lands
+        return 0.0
 
 
 class LaunchCostModel:
@@ -409,7 +427,8 @@ class RetrievalService:
                 self.counters["deadline_sheds"] += 1
                 self._resolve_shed(req.ticket, req.uid, req.tenant,
                                    req.queries.shape[0], req.k,
-                                   req.submitted_at, now, reason="deadline")
+                                   req.submitted_at, now, reason="deadline",
+                                   deadline=req.deadline)
                 resolved += 1
             else:
                 still.append(req)
@@ -425,18 +444,30 @@ class RetrievalService:
                 groups[key] = []
                 order.append(key)
             groups[key].append(req)
+        spread = self.config.deadline_spread
         for key in order:
             reqs, rows = [], 0
+            min_rem = max_rem = 0.0
             for req in groups[key]:
-                if rows + req.queries.shape[0] > self.config.max_batch \
-                        and reqs:
-                    break
+                rem = req.deadline - now    # > 0: expiry sweep ran above
+                if reqs:
+                    if rows + req.queries.shape[0] > self.config.max_batch:
+                        break
+                    # Deadline-compatibility guard: the batch runs on its
+                    # tightest deadline, so don't couple requests whose
+                    # remaining deadlines differ by more than the
+                    # configured spread — the rest of the group waits for
+                    # the next tick rather than degrading with this one.
+                    if max(max_rem, rem) > spread * min(min_rem, rem):
+                        break
                 reqs.append(req)
                 rows += req.queries.shape[0]
+                min_rem = min(min_rem, rem) if len(reqs) > 1 else rem
+                max_rem = max(max_rem, rem) if len(reqs) > 1 else rem
             for req in reqs:
                 self.queue.remove(req)
-            self._run_microbatch(self.tenants[key[0]], reqs, key[2])
-            resolved += len(reqs)
+            resolved += self._run_microbatch(self.tenants[key[0]], reqs,
+                                             key[2])
         return resolved
 
     def run_until_drained(self, max_steps: int = 1000) -> None:
@@ -483,7 +514,11 @@ class RetrievalService:
 
     # -- microbatch execution -----------------------------------------------
 
-    def _run_microbatch(self, tenant: Tenant, reqs: list, target_recall):
+    def _run_microbatch(self, tenant: Tenant, reqs: list,
+                        target_recall) -> int:
+        """Run one microbatch; returns how many requests were RESOLVED
+        (a deadline shed requeues batchmates whose own deadlines still
+        have slack, so the count can be less than ``len(reqs)``)."""
         cfg = self.config
         now = self.clock.now()
         deadline = min(r.deadline for r in reqs)
@@ -498,8 +533,9 @@ class RetrievalService:
             for r in reqs:
                 self._resolve_shed(r.ticket, r.uid, r.tenant,
                                    r.queries.shape[0], r.k, r.submitted_at,
-                                   now, reason="poisoned")
-            return
+                                   now, reason="poisoned",
+                                   deadline=r.deadline)
+            return len(reqs)
         filler = ys[int(np.argmax(ok))]
         ys[~ok] = filler
         q_total = ys.shape[0]
@@ -516,8 +552,8 @@ class RetrievalService:
                 self._resolve_shed(r.ticket, r.uid, r.tenant,
                                    r.queries.shape[0], r.k, r.submitted_at,
                                    now, reason="breaker_open",
-                                   retry_after=retry)
-            return
+                                   retry_after=retry, deadline=r.deadline)
+            return len(reqs)
 
         # Snapshot BEFORE any launch: background insert/delete/compact on
         # the mutable index (including fault-injected compactions) cannot
@@ -565,12 +601,27 @@ class RetrievalService:
                 self.counters["deadline_sheds"] += 1
             retry = (tenant.breaker.retry_after(finished)
                      if tenant.breaker.state == "open" else None)
+            resolved = 0
+            requeue = []
             for r in reqs:
+                if (reason == "deadline" and r.deadline > deadline
+                        and r.deadline > finished):
+                    # The BATCH deadline (its tightest member) ran out,
+                    # not this request's: requeue it so it retries on its
+                    # own, later, deadline instead of shedding healthy
+                    # traffic.  The batch min strictly increases each
+                    # round, so this terminates.
+                    requeue.append(r)
+                    continue
                 self._resolve_shed(r.ticket, r.uid, r.tenant,
                                    r.queries.shape[0], r.k, r.submitted_at,
                                    finished, reason=reason, error=error,
-                                   retry_after=retry, meta=dict(meta))
-            return
+                                   retry_after=retry, meta=dict(meta),
+                                   deadline=r.deadline)
+                resolved += 1
+            for r in reversed(requeue):     # back to the head, FIFO order
+                self.queue.appendleft(r)
+            return resolved
 
         ids = np.asarray(res.ids)[:q_total]
         dists = np.asarray(res.dists)[:q_total]
@@ -582,6 +633,7 @@ class RetrievalService:
             self._resolve(r, ids[sl].copy(), dists[sl].copy(), exact[sl],
                           ok[sl], used_approx, finished, dict(meta))
             row += q
+        return len(reqs)
 
     def _choose_tier(self, tenant: Tenant, remaining: float,
                      target_recall) -> str:
@@ -665,6 +717,11 @@ class RetrievalService:
         """One guarded launch: faults, timing, cost model, breaker."""
         cfg = self.config
         attempt = self.counters["launches"]
+        # A launch is really going out now: if the breaker was open (and
+        # past cooldown — _run_microbatch checked allow()), this is the
+        # half-open probe.  Any exception from here on reaches the
+        # caller's record_failure, so the probe always resolves.
+        tenant.breaker.begin_probe()
         # The timer starts BEFORE the fault hook: anything that stalls the
         # launch path synchronously (an injected compaction, a seized GIL)
         # is launch cost as far as deadlines and the cost model are
@@ -735,18 +792,25 @@ class RetrievalService:
     def _resolve_shed(self, ticket: Ticket, uid: int, tenant: str, q: int,
                       k: int, submitted: float, finished: float, *,
                       reason: str, retry_after: float | None = None,
-                      error: str | None = None,
-                      meta: dict | None = None) -> None:
+                      error: str | None = None, meta: dict | None = None,
+                      deadline: float | None = None) -> None:
         t = self.tenants.get(tenant)
         self.counters[QUALITY_SHED] += 1
         self.counters["completed"] += 1
+        # Clamp the sentinel shape: ``k`` may be the UNVALIDATED value a
+        # bad_k rejection is bouncing (k=1e9 must not allocate its own
+        # rejection into an OOM); admitted requests have k <= live_n, so
+        # their shape is unchanged.
+        kk = max(1, min(int(k), t.live_n)) if t is not None else 1
         ticket.response = RetrievalResponse(
             uid=uid, tenant=tenant, quality=QUALITY_SHED,
-            ids=np.full((q, max(k, 1)), -1, np.int32),
-            dists=np.full((q, max(k, 1)), np.inf, np.float32),
+            ids=np.full((q, kk), -1, np.int32),
+            dists=np.full((q, kk), np.inf, np.float32),
             row_quality=[QUALITY_SHED] * q, flagged_rows=[],
             shed_reason=reason, retry_after=retry_after, error=error,
             tenant_degraded=bool(t.degraded) if t else False,
             latency_s=finished - submitted,
-            deadline_met=True, meta=meta or {})
+            deadline_met=(True if deadline is None
+                          else bool(finished <= deadline)),
+            meta=meta or {})
         ticket.done = True

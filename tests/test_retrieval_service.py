@@ -20,7 +20,11 @@ from repro.serve.faults import (
     PoisonQuery,
     VirtualClock,
 )
-from repro.serve.retrieval import RetrievalService, ServiceConfig
+from repro.serve.retrieval import (
+    CircuitBreaker,
+    RetrievalService,
+    ServiceConfig,
+)
 
 N, D, K = 400, 16, 5
 SPIKE = 0.3     # injected seconds per launch in the latency tests
@@ -104,7 +108,44 @@ def test_expired_requests_shed_without_launch(index, queries):
     svc.step()
     assert ticket.done and ticket.response.quality == "shed"
     assert ticket.response.shed_reason == "deadline"
+    # Truthful labels: this deadline was MISSED, and the response says so.
+    assert ticket.response.deadline_met is False
     assert svc.counters["launches"] == 0
+
+
+def test_stale_batchmate_never_coupled_to_fresh_traffic(index, queries):
+    """REGRESSION: a microbatch runs on min(deadline), so a nearly-expired
+    request used to drag fresh batchmates into its shed.  The formation
+    spread guard keeps them in separate batches: the stale one sheds
+    alone, the fresh one completes at full quality."""
+    svc, _ = make_service(index)
+    svc.tenants["t"].cost.observe(SPIKE)      # price the tiers
+    stale = svc.submit("t", queries, K, deadline_s=0.3 * SPIKE)
+    fresh = svc.submit("t", queries, K, deadline_s=10 * SPIKE)
+    svc.run_until_drained()
+    assert stale.response.shed_reason == "deadline"
+    assert fresh.response.quality == "exact"
+    np.testing.assert_array_equal(fresh.response.ids,
+                                  np.asarray(oracle(index, queries).ids))
+
+
+def test_deadline_shed_requeues_batchmates_with_slack(index, queries):
+    """Within the spread guard two requests DO batch; when the batch sheds
+    on its tightest member's deadline, the member with remaining slack is
+    requeued and served on its own deadline, not resolved as shed."""
+    svc, _ = make_service(index)
+    svc.tenants["t"].cost.observe(SPIKE)
+    # Remaining-deadline ratio 1.83 <= deadline_spread(2.0): one batch.
+    # Its min (0.3*SPIKE) is below the partial floor (0.5*SPIKE) -> shed,
+    # but the 0.55*SPIKE member affords the partial tier by itself.
+    tight = svc.submit("t", queries, K, deadline_s=0.3 * SPIKE)
+    slack = svc.submit("t", queries, K, deadline_s=0.55 * SPIKE)
+    svc.step()
+    assert tight.done and tight.response.shed_reason == "deadline"
+    assert not slack.done                     # requeued, not shed
+    svc.run_until_drained()
+    assert slack.response.quality in ("exact", "partial")
+    assert svc.counters["launches"] >= 1
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +173,14 @@ def test_bad_k_rejected_up_front(index, queries):
     assert t.response.shed_reason == "bad_k"
     assert "live_n" in t.response.error
     assert svc.counters["launches"] == 0
+    # The rejection's sentinel arrays are clamped to live_n columns: a
+    # huge k must not allocate gigabytes while building its own bounce.
+    t = svc.submit("t", queries, 10**9)
+    assert t.response.shed_reason == "bad_k"
+    assert t.response.ids.shape == (queries.shape[0], index.live_n)
+    t = svc.submit("t", queries, 0)
+    assert t.response.shed_reason == "bad_k"
+    assert t.response.ids.shape == (queries.shape[0], 1)
 
 
 def test_microbatching_coalesces_requests(index, queries):
@@ -179,6 +228,48 @@ def test_breaker_opens_half_opens_closes(index, queries):
     assert brk.state == "closed"
     np.testing.assert_array_equal(r3.ids, np.asarray(oracle(index,
                                                             queries).ids))
+
+
+def test_breaker_allow_is_side_effect_free():
+    """allow() must not transition open -> half_open: the probe is marked
+    only when a launch actually goes out (begin_probe), so a caller that
+    checks and then sheds anyway cannot wedge the breaker."""
+    brk = CircuitBreaker(threshold=1, cooldown_s=2.0)
+    brk.record_failure(0.0)
+    assert brk.state == "open"
+    assert not brk.allow(1.0)
+    assert brk.allow(2.5) and brk.allow(2.5)  # idempotent, no transition
+    assert brk.state == "open"
+    brk.begin_probe()
+    assert brk.state == "half_open"
+    assert not brk.allow(2.5)                 # probe in flight
+    assert brk.retry_after(2.5) > 0           # nonzero hint, never 0-forever
+    brk.record_failure(3.0)
+    assert brk.state == "open" and brk.retry_after(3.5) > 0
+
+
+def test_breaker_probe_survives_deadline_shed(index, queries):
+    """REGRESSION: a post-cooldown batch that sheds on deadline WITHOUT
+    launching used to leave the breaker wedged in half_open (allow()
+    False, retry_after 0.0 forever).  It must stay open and still admit
+    the probe for the next request that can afford a launch."""
+    plan = FaultPlan([LaunchError(at_launches=(0, 1))], seed=9)
+    svc, clock = make_service(index, faults=plan, breaker_threshold=2,
+                              breaker_cooldown_s=1.0)
+    brk = svc.tenants["t"].breaker
+    r = svc.search_sync("t", queries, K)
+    assert r.shed_reason == "launch_failed" and brk.state == "open"
+
+    clock.advance(1.1)                        # cooldown passed: probe due
+    svc.tenants["t"].cost.observe(1.0)        # price every tier off-deadline
+    r = svc.search_sync("t", queries, K, deadline_s=0.01)
+    assert r.shed_reason == "deadline"        # shed BEFORE any launch
+    assert brk.state == "open"                # NOT wedged in half_open
+    assert brk.retry_after(clock.now()) == 0  # probe still on offer
+
+    r = svc.search_sync("t", queries, K, deadline_s=10.0)
+    assert r.quality == "exact"               # the probe ran and closed it
+    assert brk.state == "closed"
 
 
 def test_transient_failure_retried_within_deadline(index, queries):
