@@ -36,7 +36,10 @@ BATCH_SIZES = (1, 8, 64, 256)
 
 @functools.partial(jax.jit, static_argnames=("k", "budget"))
 def _vmapped_baseline(index, ys, k, budget):
-    return jax.vmap(lambda y: search.knn_search(index, y, k, budget))(ys)
+    # validate=False: the host-side domain gate cannot run on a vmap
+    # tracer (the synthetic queries are valid by construction here).
+    return jax.vmap(lambda y: search.knn_search(index, y, k, budget,
+                                                validate=False))(ys)
 
 
 def _peak_temp_bytes(index, ys, k, budget, block_rows):
@@ -149,6 +152,34 @@ def run(scale: float = 1.0):
                     {"n": n_l, "qps": round(q_l / (us_str / 1e6), 1),
                      "speedup": round(us_ref / us_str, 2),
                      **_stream_cols(index_l, ys_l, k, budget_l, br_l)}))
+
+    # Fused vs unfused scan at the same large-n shape: the streamed row
+    # above runs the fused filter+prune kernel with the hoisted envelope
+    # gate; this A/B pins the old per-step gate + standalone prune kernel
+    # so the BENCH trajectory tracks the fusion win in isolation (identical
+    # results — tests/test_stream_prune.py asserts bit-parity).
+    us_unf = timeit(lambda: search._knn_search_batch_unfused_jit(
+        index_l, ys_l, k, budget_l, br_l), repeats=3)
+    rows.append(Row("batch_search", f"large_n_unfused_q{q_l}", us_unf,
+                    {"n": n_l, "qps": round(q_l / (us_unf / 1e6), 1),
+                     "fused_speedup": round(us_unf / us_str, 2)}))
+
+    # Tuned vs default block size: block_rows=None consults the checked-in
+    # autotuner table (launch/autotune.py); DEFAULT_BLOCK_ROWS is what a
+    # caller got before the table existed.  tuned_speedup > 1 means the
+    # sweep's pick beats the hardcoded default at this shape.
+    br_tuned = search.resolve_block_rows(None, index_l.n, q=q_l,
+                                         storage=index_l.storage)
+    us_def = timeit(lambda: search.knn_search_batch(
+        index_l, ys_l, k, budget_l,
+        block_rows=search.DEFAULT_BLOCK_ROWS), repeats=3)
+    us_tuned = timeit(lambda: search.knn_search_batch(
+        index_l, ys_l, k, budget_l), repeats=3)
+    rows.append(Row("batch_search", f"large_n_tuned_q{q_l}", us_tuned,
+                    {"n": n_l, "block_rows": br_tuned,
+                     "default_block_rows": search.DEFAULT_BLOCK_ROWS,
+                     "qps": round(q_l / (us_tuned / 1e6), 1),
+                     "tuned_speedup": round(us_def / us_tuned, 2)}))
     return rows
 
 

@@ -1,0 +1,199 @@
+"""Roofline analysis of the fused filter+prune kernel vs the two-kernel path.
+
+Lowers the kernel programs (and the end-to-end streaming pipelines) through
+XLA, runs the trip-count-aware HLO cost analyzer
+(``repro.launch.hlo_analysis``) on the optimized module text, and derives
+per-program roofline terms with the TPU v5e constants from
+``repro.launch.mesh``:
+
+    compute term  = HLO FLOPs / PEAK_FLOPS_BF16
+    memory term   = HLO bytes / HBM_BW
+    roofline fraction = compute term / max(compute, memory) — how close the
+    program sits to the compute roof once its own HBM traffic is paid.
+
+The "unfused" kernel cell is TWO compiled programs (the UB filter kernel
+and the Theorem-3 prune kernel, costs summed) because that is how the
+pre-fusion pipeline dispatched them: the query operands are read twice and
+the UB tile round-trips HBM between the phases.  The fused cell is one
+program producing both outputs from a single read of the shared operands —
+``hbm_bytes_saved`` on the fused row is the measured difference.
+
+Programs are lowered in ``ref`` impl mode so stock XLA (the backend this
+container actually runs) produces the module; on TPU the same dispatcher
+sends the shape to the Pallas kernel, whose VMEM residency can only improve
+on the bytes modeled here.  Wall-clock columns are CPU medians — structural
+sanity, not TPU perf.
+
+CLI: ``python -m benchmarks.bench_kernel_roofline --summary BENCH.json``
+renders the kernel_roofline rows of a bench artifact as a markdown table
+(the CI job step appends it to ``$GITHUB_STEP_SUMMARY``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search
+from repro.core.index import build_index
+from repro.kernels import ops
+from repro.launch import hlo_analysis
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+from .common import Row, timeit
+
+
+def _analyze(jitted, *args) -> dict:
+    """Compile one program and derive its roofline cell."""
+    compiled = jitted.lower(*args).compile()
+    costs = hlo_analysis.analyze_text(compiled.as_text())
+    try:
+        temp = int(compiled.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — backend-dependent introspection
+        temp = -1
+    return {"flops": costs.flops, "bytes": costs.bytes, "temp_bytes": temp}
+
+
+def _terms(flops: float, nbytes: float) -> dict:
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    bound_s = max(compute_s, memory_s, 1e-30)
+    return {
+        "flops": int(flops),
+        "bytes": int(nbytes),
+        "intensity": round(flops / max(nbytes, 1.0), 3),
+        "roofline_fraction": round(compute_s / bound_s, 4),
+        "dominant": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
+def _kernel_operands(rng, n, m, q):
+    alpha = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    sg = jnp.abs(jnp.asarray(rng.normal(size=(n, m)), jnp.float32))
+    amin = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    gmax = jnp.abs(jnp.asarray(rng.normal(size=(n, m)), jnp.float32))
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.abs(jnp.asarray(rng.normal(size=(q, m)), jnp.float32))
+    qb = jnp.asarray(rng.normal(size=(q, m)) + 4.0, jnp.float32)
+    return alpha, sg, amin, gmax, qc, sd, qb
+
+
+def run(scale: float = 1.0) -> list[Row]:
+    rng = np.random.default_rng(0)
+    n = max(1024, int(8192 * scale))
+    m, q = 8, 64
+    alpha, sg, amin, gmax, qc, sd, qb = _kernel_operands(rng, n, m, q)
+
+    # -- kernel level: one fused program vs the two-program dispatch --------
+    ub_jit = jax.jit(lambda a, g, c, s: ops.bregman_ub_matrix(
+        a, g, c, s, impl="ref"))
+    prune_jit = jax.jit(lambda am, gm, c, s, b: ops.bregman_prune_block(
+        am, gm, c, s, b, impl="ref"))
+    fused_jit = jax.jit(
+        lambda a, g, am, gm, c, s, b: ops.bregman_filter_prune_block(
+            a, g, am, gm, c, s, b, impl="ref"))
+
+    cell_ub = _analyze(ub_jit, alpha, sg, qc, sd)
+    cell_pr = _analyze(prune_jit, amin, gmax, qc, sd, qb)
+    cell_fu = _analyze(fused_jit, alpha, sg, amin, gmax, qc, sd, qb)
+    unfused_flops = cell_ub["flops"] + cell_pr["flops"]
+    unfused_bytes = cell_ub["bytes"] + cell_pr["bytes"]
+
+    def _unfused_call():
+        return (ub_jit(alpha, sg, qc, sd),
+                prune_jit(amin, gmax, qc, sd, qb))
+
+    us_unfused = timeit(_unfused_call, repeats=5)
+    us_fused = timeit(
+        lambda: fused_jit(alpha, sg, amin, gmax, qc, sd, qb), repeats=5)
+
+    rows = [
+        Row("kernel_roofline", "filter_prune_unfused", us_unfused,
+            {"n": n, "q": q, **_terms(unfused_flops, unfused_bytes),
+             "programs": 2}),
+        Row("kernel_roofline", "filter_prune_fused", us_fused,
+            {"n": n, "q": q, **_terms(cell_fu["flops"], cell_fu["bytes"]),
+             "programs": 1,
+             "hbm_bytes_saved": int(unfused_bytes - cell_fu["bytes"]),
+             "speedup": round(us_unfused / max(us_fused, 1e-9), 2)}),
+    ]
+
+    # -- pipeline level: streamed search, fused vs unfused scan -------------
+    d, k = 32, 10
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    index = build_index(data, "squared_euclidean", m=m,
+                        num_clusters=min(64, n // 16), seed=0)
+    ys = jnp.asarray(rng.normal(size=(16, d)).astype(np.float32))
+    budget = search.default_budget(index, k)
+    br = search.resolve_block_rows(None, index.n, q=16,
+                                   storage=index.storage)
+
+    cell_pipe_f = _analyze(search._knn_search_batch_jit,
+                           index, ys, k, budget, br)
+    cell_pipe_u = _analyze(search._knn_search_batch_unfused_jit,
+                           index, ys, k, budget, br)
+    us_pipe_f = timeit(lambda: search._knn_search_batch_jit(
+        index, ys, k, budget, br), repeats=3)
+    us_pipe_u = timeit(lambda: search._knn_search_batch_unfused_jit(
+        index, ys, k, budget, br), repeats=3)
+    rows.append(Row(
+        "kernel_roofline", "pipeline_unfused", us_pipe_u,
+        {"n": index.n, "q": 16, "block_rows": br,
+         **_terms(cell_pipe_u["flops"], cell_pipe_u["bytes"]),
+         "temp_bytes": cell_pipe_u["temp_bytes"]}))
+    rows.append(Row(
+        "kernel_roofline", "pipeline_fused", us_pipe_f,
+        {"n": index.n, "q": 16, "block_rows": br,
+         **_terms(cell_pipe_f["flops"], cell_pipe_f["bytes"]),
+         "temp_bytes": cell_pipe_f["temp_bytes"],
+         "hbm_bytes_saved": int(cell_pipe_u["bytes"]
+                                - cell_pipe_f["bytes"]),
+         "speedup": round(us_pipe_u / max(us_pipe_f, 1e-9), 2)}))
+    return rows
+
+
+def summary_table(bench_json_path: str) -> str:
+    """Markdown roofline table from a BENCH_*.json artifact."""
+    payload = json.load(open(bench_json_path))
+    rows = [r for r in payload.get("rows", [])
+            if r.get("bench") == "kernel_roofline"]
+    if not rows:
+        return "no kernel_roofline rows in " + bench_json_path
+    out = ["### Kernel roofline (fused filter+prune pass)", "",
+           "| program | us/call | GFLOPs | MiB moved | flops/byte "
+           "| roofline | bound | speedup |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        d = r["derived"]
+        speed = d.get("speedup", "")
+        out.append(
+            f"| {r['name']} | {r['us_per_call']:.1f} "
+            f"| {d['flops'] / 1e9:.4f} | {d['bytes'] / 2**20:.2f} "
+            f"| {d['intensity']:.2f} | {d['roofline_fraction']:.3f} "
+            f"| {d['dominant']} | {speed} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", metavar="BENCH_JSON", default=None,
+                    help="render kernel_roofline rows of a bench artifact "
+                         "as markdown (for $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--scale", type=float, default=1.0)
+    args = ap.parse_args(argv)
+    if args.summary:
+        print(summary_table(args.summary))
+        return 0
+    for row in run(args.scale):
+        print(row.csv())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, "src")
+    raise SystemExit(main())

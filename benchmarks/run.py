@@ -34,6 +34,7 @@ MODULES = [
     "bench_dist_knn",        # shard-count scaling (8 forced host devices)
     "bench_retrieval",       # retrieval-service overhead (chaos: --chaos)
     "bench_kernels",         # kernel micro-benches
+    "bench_kernel_roofline",  # fused vs unfused kernel HLO roofline terms
 ]
 
 

@@ -102,28 +102,62 @@ logger = logging.getLogger(__name__)
 DEFAULT_BLOCK_ROWS = 4096
 
 
-def resolve_block_rows(block_rows: int | None, n: int) -> int:
+def resolve_block_rows(block_rows: int | None, n: int, *,
+                       q: int | None = None,
+                       storage: str | None = None) -> int:
     """Validate the ``block_rows`` tuning knob against an index of n rows.
 
-    ``None`` means :data:`DEFAULT_BLOCK_ROWS`.  The value bounds BOTH
-    streaming scans' working sets (filter merge and prune+compact), so it
-    trades peak memory/VMEM residency against scan overhead: smaller
-    blocks -> lower peak intermediate bytes (O(block_rows * q)) and
-    finer-grained envelope skipping, larger blocks -> fewer scan steps and
-    better MXU utilization per step.  Values beyond ``n`` are legal (the
-    layout clamps to one block); non-positive or non-integer values are
-    programming errors and raise.
+    ``None`` means "pick for me": consult the checked-in autotuner table
+    (launch/autotune.py) for this backend/shape, falling back to
+    :data:`DEFAULT_BLOCK_ROWS` when no tuned entry applies.  ``q`` and
+    ``storage`` sharpen the table lookup and are optional — callers that
+    know the query-batch width and the index storage tier should pass
+    them.  The value bounds BOTH streaming scans' working sets (filter
+    merge and prune+compact), so it trades peak memory/VMEM residency
+    against scan overhead: smaller blocks -> lower peak intermediate
+    bytes (O(block_rows * q)) and finer-grained envelope skipping, larger
+    blocks -> fewer scan steps and better MXU utilization per step.
+    Values beyond ``n`` are legal (the layout clamps to one block);
+    non-positive or non-integer values are programming errors and raise.
+
+    The empty-index guard fires on BOTH knob paths: an empty index is an
+    error regardless of whether the caller tuned the knob.
     """
+    if n < 1:
+        raise ValueError(f"cannot search an empty index (n={n})")
     if block_rows is None:
-        return DEFAULT_BLOCK_ROWS
+        from repro.launch.autotune import lookup_block_rows
+        tuned = lookup_block_rows(n, q, storage=storage)
+        return tuned if tuned is not None else DEFAULT_BLOCK_ROWS
     if isinstance(block_rows, bool) or not isinstance(block_rows, int):
         raise ValueError(f"block_rows must be an int, got {block_rows!r}")
     if block_rows < 8:
         raise ValueError(
             f"block_rows={block_rows} is below the minimum tile of 8 rows")
-    if n < 1:
-        raise ValueError(f"cannot search an empty index (n={n})")
     return block_rows
+
+
+def resolve_env_block_rows(env_block_rows: int | None) -> int:
+    """Validate the envelope-gate granularity knob.
+
+    Envelope tables are STORED at :data:`~repro.core.index.ENV_BLOCK_ROWS`
+    granularity; the gate can run at any coarser multiple by min/max-
+    coarsening the tables on the fly (a coarser envelope is a strictly
+    looser bound, so every admitted-row set is a superset and results are
+    invariant — only the skip rate changes).  ``None`` means the storage
+    granularity; the autotuner sweeps multiples.
+    """
+    if env_block_rows is None:
+        return ENV_BLOCK_ROWS
+    if (isinstance(env_block_rows, bool)
+            or not isinstance(env_block_rows, int)):
+        raise ValueError(
+            f"env_block_rows must be an int, got {env_block_rows!r}")
+    if env_block_rows < ENV_BLOCK_ROWS or env_block_rows % ENV_BLOCK_ROWS:
+        raise ValueError(
+            f"env_block_rows={env_block_rows} must be a positive multiple "
+            f"of the storage granularity {ENV_BLOCK_ROWS}")
+    return env_block_rows
 
 
 class SearchResult(NamedTuple):
@@ -433,6 +467,24 @@ def _pad_cols(arr: Array, bn: int, nb: int, fill: float = 0.0) -> Array:
     return jnp.pad(arr, (0, pad), constant_values=fill).reshape(nb, bn)
 
 
+def _filter_blocks(index: BallForest, bn: int, nb: int) -> tuple:
+    """The (nb, bn, ...) filter-table blocks (alpha / sqrt_gamma + decode).
+
+    Shared by the filter scan and the fused filter+prune scan so both read
+    identically padded blocks (zero-padded; padded rows are masked by the
+    global-index guard in the consumers).
+    """
+    if index.storage == "int8":
+        return (_pad_blocks(index.alpha, bn, nb),
+                _pad_blocks(index.sqrt_gamma, bn, nb),
+                _pad_cols(index.alpha_scale, bn, nb),
+                _pad_cols(index.alpha_zp, bn, nb),
+                _pad_cols(index.sg_scale, bn, nb),
+                _pad_cols(index.sg_zp, bn, nb))
+    return (_pad_blocks(index.alpha, bn, nb),
+            _pad_blocks(index.sqrt_gamma, bn, nb))
+
+
 def _batch_filter_topk(index: BallForest, qs: dict, k: int,
                        block_rows: int) -> tuple[Array, Array]:
     """Streaming per-column k-selection over the (n, q) UB matrix.
@@ -449,17 +501,8 @@ def _batch_filter_topk(index: BallForest, qs: dict, k: int,
     n = index.alpha.shape[0]
     q = qs["qconst"].shape[0]
     bn, nb = _block_layout(n, block_rows)
-    alpha_b = _pad_blocks(index.alpha, bn, nb)
-    sg_b = _pad_blocks(index.sqrt_gamma, bn, nb)
     offs = jnp.arange(nb, dtype=jnp.int32) * bn
-    if index.storage == "int8":
-        xs = (alpha_b, sg_b,
-              _pad_cols(index.alpha_scale, bn, nb),
-              _pad_cols(index.alpha_zp, bn, nb),
-              _pad_cols(index.sg_scale, bn, nb),
-              _pad_cols(index.sg_zp, bn, nb), offs)
-    else:
-        xs = (alpha_b, sg_b, offs)
+    xs = _filter_blocks(index, bn, nb) + (offs,)
 
     def step(carry, blk):
         best_v, best_i = carry                          # (q, k) each
@@ -562,61 +605,50 @@ def _compact_candidates(mask: Array, budget: int) -> tuple[Array, Array, Array]:
     return sel, valid, num_candidates
 
 
-def _stream_prune_compact(index: BallForest, qs: dict, qb: Array,
-                          budget: int, block_rows: int,
-                          row_offset: Array | None = None):
-    """Streaming prune + compact: one scan, no (n, q) intermediates.
+def _fill_block_slots(sel: Array, count: Array, admit: Array, off: Array,
+                      budget: int) -> tuple[Array, Array]:
+    """Route one block's admitted rows into their budget slots.
 
-    A second ``lax.scan`` over the filter's ``block_rows`` blocks replaces
-    :func:`_candidate_mask_batch` + :func:`_compact_candidates` (kept as
-    the bit-parity reference).  Per block:
-
-    1. **Envelope gate** — the block's corner-envelope window (the
-       ENV_BLOCK_ROWS-group rows covering it, ``dynamic_slice`` from the
-       tiny replicated tables) runs the Theorem-3 test at block
-       granularity.  An envelope dominates every row it covers, so a
-       block NO query admits is skipped via ``lax.cond`` — its per-point
-       corner tile is never read, its admit kernel never runs.
-    2. **Fused per-point admit** — surviving blocks call the
-       ``bregman_prune_block`` kernel (corner decode in the int8 tier,
-       lower-bound recompute, compare, mask emit in one pass) -> a
-       (block, q) int32 tile.
-    3. **Streaming compaction** — the running member count carried across
-       blocks names which budget slots this block fills
-       (``count .. count+block_total``); those slots find their rows by
-       binary search on the block's admit prefix-sum, a blockwise
-       ``searchsorted`` identical in slot semantics to the reference
-       compaction (slot order = index order) but O(q * budget * log bn)
-       per block with NO scatter (XLA CPU serializes scatters) and no
-       array longer than the block.
-
-    ``row_offset`` maps local rows to GLOBAL envelope rows for the
-    sharded path (dist/knn.py keeps the envelope tables replicated and
-    passes ``axis_index * local_n``); single-host callers leave it None.
-    Returns ``(sel (q, budget), valid (q, budget), num_candidates (q,),
-    env_admitted (q,), blocks_run ())``: ``env_admitted`` counts, per
-    query, the (block, query) tiles the envelope gate admitted —
-    ``nb * q - sum(env_admitted)`` tiles were rejected at envelope level
-    — while ``blocks_run`` counts the blocks whose per-point kernel
-    actually executed (a block runs, for ALL its query columns, whenever
-    ANY query admits it).
+    A block fills the contiguous slot range [count, count+tot); the row of
+    within-block member rank r is found by binary search on the block's
+    admit prefix-sum (the blockwise analogue of _compact_candidates'
+    searchsorted).  Only min(bn, budget) ranks can occur per block, so the
+    search is rank-limited and a budget-sized gather+select routes each
+    slot to its rank — no scatter anywhere (XLA CPU serializes scatters)
+    and no array longer than the block.  Factored out of the scan bodies
+    so the fused and unfused paths share slot semantics by construction.
     """
-    from repro.kernels import ops as kernel_ops
-    n = index.alpha_min_pt.shape[0]
-    q, m = qb.shape
-    bn, nb = _block_layout(n, block_rows)
-    offs = jnp.arange(nb, dtype=jnp.int32) * bn
-    xs = _corner_blocks(index, bn, nb) + (offs,)
+    bn = admit.shape[0]
+    csum = jnp.cumsum(admit, axis=0)                     # (bn, q)
+    tot = csum[-1]                                       # (q,)
+    t_ranks = min(bn, budget)
+    ranks = jnp.arange(1, t_ranks + 1, dtype=jnp.int32)
+    rows_for_rank = jax.vmap(
+        lambda c: jnp.searchsorted(c, ranks, side="left"))(csum.T)
+    rows_for_rank = jnp.minimum(rows_for_rank,
+                                bn - 1).astype(jnp.int32)  # (q, T)
+    r0 = (jnp.arange(budget, dtype=jnp.int32)[None, :]
+          - count[:, None])                              # rank-1
+    fill = (r0 >= 0) & (r0 < tot[:, None])
+    rows_at_slot = jnp.take_along_axis(
+        rows_for_rank, jnp.clip(r0, 0, t_ranks - 1), axis=1)
+    sel = jnp.where(fill, off + rows_at_slot, sel)
+    return sel, count + tot
 
-    # Envelope tables: a block of bn rows spans at most win =
-    # ceil(bn / ENV_BLOCK_ROWS) + 1 envelope rows at any alignment.  Pad
-    # with inert rows (never admit) so every window is in range: block
-    # starts lie below the covered row count, hence window starts below
-    # the unpadded table length.
+
+def _env_tables(index: BallForest, n: int, m: int, eb: int, win: int,
+                sharded: bool) -> tuple[Array, Array]:
+    """Envelope tables at gate granularity ``eb``, padded with inert rows.
+
+    The tables are STORED at ENV_BLOCK_ROWS granularity; a coarser gate
+    (eb a multiple of it) min/max-coarsens them on the fly.  Coarser
+    envelopes are strictly looser bounds, so the admitted-block set only
+    grows and results stay bit-identical — the knob trades gate precision
+    (skip rate) against gate cost, which is what the autotuner sweeps.
+    """
     env_a, env_g = index.env_alpha_min, index.env_sqrt_gamma_max
-    win = -(-bn // ENV_BLOCK_ROWS) + 1
     if env_a is None:
-        if row_offset is not None:
+        if sharded:
             # The sharded path must carry GLOBAL envelope tables
             # (shard_index refreshes them); a local-n-sized always-admit
             # fallback indexed at a global offset would silently skip
@@ -628,82 +660,181 @@ def _stream_prune_compact(index: BallForest, qs: dict, qb: Array,
         # table keeps the scan structure with skipping disabled.  It must
         # cover EVERY block's window (not just block 0), or later blocks
         # would slice into the inert padding and be wrongly skipped.
-        ne = max(-(-n // ENV_BLOCK_ROWS), 1)
+        ne = max(-(-n // eb), 1)
         env_a = jnp.full((ne, m), -POS_BIG, jnp.float32)
         env_g = jnp.zeros((ne, m), jnp.float32)
+    elif eb != ENV_BLOCK_ROWS:
+        f = eb // ENV_BLOCK_ROWS
+        ne = env_a.shape[0]
+        pad = -ne % f
+        env_a = jnp.min(jnp.pad(env_a, ((0, pad), (0, 0)),
+                                constant_values=POS_BIG)
+                        .reshape(-1, f, m), axis=1)
+        env_g = jnp.max(jnp.pad(env_g, ((0, pad), (0, 0)))
+                        .reshape(-1, f, m), axis=1)
     env_a = jnp.pad(env_a, ((0, win), (0, 0)), constant_values=POS_BIG)
     env_g = jnp.pad(env_g, ((0, win), (0, 0)))
-    qcT, sdT, qbT = qs["qconst"].T, qs["sqrt_delta"].T, qb.T   # (M, q)
+    return env_a, env_g
 
-    def step(carry, blk):
-        sel, count, admitted, blocks_run = carry
-        off = blk[-1]
-        goff = off if row_offset is None else row_offset + off
-        e0 = goff // ENV_BLOCK_ROWS
+
+def _stream_prune_compact(index: BallForest, qs: dict, qb: Array,
+                          budget: int, block_rows: int,
+                          row_offset: Array | None = None,
+                          fused: bool = True,
+                          env_block_rows: int | None = None,
+                          with_tau: bool = False):
+    """Streaming prune + compact: one scan, no (n, q) intermediates.
+
+    A second ``lax.scan`` over the filter's ``block_rows`` blocks replaces
+    :func:`_candidate_mask_batch` + :func:`_compact_candidates` (kept as
+    the bit-parity reference).  Per block:
+
+    1. **Envelope gate** — the corner-envelope rows covering the block
+       run the Theorem-3 test at block granularity.  An envelope
+       dominates every row it covers, so a block NO query admits is
+       skipped via ``lax.cond`` — its per-point corner tile is never
+       read, its admit kernel never runs.  The FUSED path evaluates the
+       whole envelope table in one vectorized pass before the scan (one
+       (ne, M, q) op + a prefix-sum, so the per-block gate is two gathers
+       instead of per-step dynamic slices); the unfused path keeps the
+       original per-step ``dynamic_slice`` window as the comparator.
+       Both compute identical gate bits.
+    2. **Per-point admit** — surviving blocks call one kernel: the fused
+       path runs ``bregman_filter_prune_block`` (UB tile + Theorem-3
+       admit in one VMEM-resident pass over the row block — the UB
+       values never round-trip through HBM, and feed the ``tau_admit``
+       telemetry when ``with_tau``); the unfused path runs the original
+       ``bregman_prune_block``.  Both emit the same (block, q) int32
+       admit tile.
+    3. **Streaming compaction** — :func:`_fill_block_slots` routes the
+       block's members into the budget slots carried across blocks;
+       slot order = index order, identical to the reference compaction.
+
+    ``row_offset`` maps local rows to GLOBAL envelope rows for the
+    sharded path (dist/knn.py keeps the envelope tables replicated and
+    passes ``axis_index * local_n``); single-host callers leave it None.
+    ``env_block_rows`` coarsens the gate granularity (see
+    :func:`resolve_env_block_rows`); results are invariant, skip rates
+    are not.  Returns ``(sel (q, budget), valid (q, budget),
+    num_candidates (q,), env_admitted (q,), blocks_run (), tau (q,))``:
+    ``env_admitted`` counts, per query, the (block, query) tiles the
+    envelope gate admitted — ``nb * q - sum(env_admitted)`` tiles were
+    rejected at envelope level — while ``blocks_run`` counts the blocks
+    whose per-point kernel actually executed (a block runs, for ALL its
+    query columns, whenever ANY query admits it).  ``tau`` is the
+    per-query min UB over admitted rows (+BIG when nothing admitted or
+    ``with_tau`` is off — the fused kernel's UB output is only consumed,
+    and on the jnp ref path only computed, when the caller asks).
+    """
+    from repro.kernels import ops as kernel_ops
+    n = index.alpha_min_pt.shape[0]
+    q, m = qb.shape
+    bn, nb = _block_layout(n, block_rows)
+    eb = resolve_env_block_rows(env_block_rows)
+    offs = jnp.arange(nb, dtype=jnp.int32) * bn
+    # A block of bn rows spans at most win = ceil(bn / eb) + 1 envelope
+    # rows at any alignment.  Pad with inert rows (never admit) so every
+    # window is in range: block starts lie below the covered row count,
+    # hence window starts below the unpadded table length.
+    win = -(-bn // eb) + 1
+    env_a, env_g = _env_tables(index, n, m, eb, win,
+                               sharded=row_offset is not None)
+    qcT, sdT, qbT = qs["qconst"].T, qs["sqrt_delta"].T, qb.T   # (M, q)
+    goffs = offs if row_offset is None else row_offset + offs  # (nb,)
+
+    if fused:
+        # Hoisted envelope gate: per-row admit over the whole (padded)
+        # table in one op, then each block's OR-over-span via a prefix-sum
+        # difference — bitwise the same gate as the windowed slice (same
+        # per-row admit bits, same span), without nb dynamic slices.
+        lb_env = (env_a[:, :, None] + qcT[None]
+                  - env_g[:, :, None] * sdT[None])         # (nep, M, q)
+        row_admit = jnp.any(lb_env <= qbT[None], axis=1)   # (nep, q)
+        ecs = jnp.concatenate(
+            [jnp.zeros((1, q), jnp.int32),
+             jnp.cumsum(row_admit.astype(jnp.int32), axis=0)], axis=0)
+        e0s = goffs // eb                                  # (nb,)
+        e_his = (goffs + bn - 1) // eb
+        env_admit_all = (jnp.take(ecs, e_his + 1, axis=0)
+                         - jnp.take(ecs, e0s, axis=0)) > 0  # (nb, q)
+        xs = (_filter_blocks(index, bn, nb)
+              + _corner_blocks(index, bn, nb) + (offs, env_admit_all))
+    else:
+        xs = _corner_blocks(index, bn, nb) + (offs,)
+
+    def gate_windowed(goff):
+        e0 = goff // eb
         wa = jax.lax.dynamic_slice(env_a, (e0, 0), (win, env_a.shape[1]))
         wg = jax.lax.dynamic_slice(env_g, (e0, 0), (win, env_g.shape[1]))
         # The static window is sized for the worst misalignment; rows past
         # the block's actual envelope span (e.g. the whole +1 row when the
-        # block is ENV-aligned) are masked inert so they cannot loosen the
+        # block is eb-aligned) are masked inert so they cannot loosen the
         # gate.
-        e_hi = (goff + bn - 1) // ENV_BLOCK_ROWS
+        e_hi = (goff + bn - 1) // eb
         in_span = (e0 + jnp.arange(win)) <= e_hi                # (win,)
         wa = jnp.where(in_span[:, None], wa, POS_BIG)
         wg = jnp.where(in_span[:, None], wg, 0.0)
-        lb_env = wa[:, :, None] + qcT[None] - wg[:, :, None] * sdT[None]
-        env_admit = jnp.any(lb_env <= qbT[None], axis=(0, 1))   # (q,)
+        lb = wa[:, :, None] + qcT[None] - wg[:, :, None] * sdT[None]
+        return jnp.any(lb <= qbT[None], axis=(0, 1))            # (q,)
+
+    def step(carry, blk):
+        sel, count, admitted, blocks_run, tau = carry
+        if fused:
+            off, env_admit = blk[-2], blk[-1]
+        else:
+            off = blk[-1]
+            env_admit = gate_windowed(
+                off if row_offset is None else row_offset + off)
 
         def run(args):
-            sel, count = args
-            if index.storage == "int8":
-                am, gm, a_s, a_z, g_s, g_z, _ = blk
-                admit = kernel_ops.bregman_prune_block_quant(
-                    am, a_s, a_z, gm, g_s, g_z,
-                    qs["qconst"], qs["sqrt_delta"], qb)          # (bn, q)
+            sel, count, tau = args
+            if fused:
+                if index.storage == "int8":
+                    (a, sg, a_s, a_z, g_s, g_z,
+                     am, gm, am_s, am_z, gm_s, gm_z, _, _) = blk
+                    ub, admit = kernel_ops.bregman_filter_prune_block_quant(
+                        a, a_s, a_z, sg, g_s, g_z,
+                        am, am_s, am_z, gm, gm_s, gm_z,
+                        qs["qconst"], qs["sqrt_delta"], qb)      # (bn, q) x2
+                else:
+                    a, sg, am, gm, _, _ = blk
+                    ub, admit = kernel_ops.bregman_filter_prune_block(
+                        a, sg, am, gm,
+                        qs["qconst"], qs["sqrt_delta"], qb)
             else:
-                am, gm, _ = blk
-                admit = kernel_ops.bregman_prune_block(
-                    am, gm, qs["qconst"], qs["sqrt_delta"], qb)
+                ub = None
+                if index.storage == "int8":
+                    am, gm, a_s, a_z, g_s, g_z, _ = blk
+                    admit = kernel_ops.bregman_prune_block_quant(
+                        am, a_s, a_z, gm, g_s, g_z,
+                        qs["qconst"], qs["sqrt_delta"], qb)      # (bn, q)
+                else:
+                    am, gm, _ = blk
+                    admit = kernel_ops.bregman_prune_block(
+                        am, gm, qs["qconst"], qs["sqrt_delta"], qb)
             gidx = off + jnp.arange(bn, dtype=jnp.int32)
             admit = admit * (gidx < n).astype(jnp.int32)[:, None]
-            csum = jnp.cumsum(admit, axis=0)                     # (bn, q)
-            tot = csum[-1]                                       # (q,)
-            # A block fills the contiguous slot range [count, count+tot);
-            # the row of within-block member rank r is found by binary
-            # search on the block prefix-sum (the blockwise analogue of
-            # _compact_candidates' searchsorted).  Only min(bn, budget)
-            # ranks can occur per block, so the search is rank-limited and
-            # a budget-sized gather+select routes each slot to its rank —
-            # no scatter anywhere (XLA CPU serializes scatters).
-            t_ranks = min(bn, budget)
-            ranks = jnp.arange(1, t_ranks + 1, dtype=jnp.int32)
-            rows_for_rank = jax.vmap(
-                lambda c: jnp.searchsorted(c, ranks, side="left"))(csum.T)
-            rows_for_rank = jnp.minimum(rows_for_rank,
-                                        bn - 1).astype(jnp.int32)  # (q, T)
-            r0 = (jnp.arange(budget, dtype=jnp.int32)[None, :]
-                  - count[:, None])                              # rank-1
-            fill = (r0 >= 0) & (r0 < tot[:, None])
-            rows_at_slot = jnp.take_along_axis(
-                rows_for_rank, jnp.clip(r0, 0, t_ranks - 1), axis=1)
-            sel = jnp.where(fill, off + rows_at_slot, sel)
-            return sel, count + tot
+            if with_tau and ub is not None:
+                tau = jnp.minimum(
+                    tau, jnp.min(jnp.where(admit > 0, ub, POS_BIG), axis=0))
+            sel, count = _fill_block_slots(sel, count, admit, off, budget)
+            return sel, count, tau
 
         any_admit = jnp.any(env_admit)
-        sel, count = jax.lax.cond(any_admit, run,
-                                  lambda args: args, (sel, count))
+        sel, count, tau = jax.lax.cond(any_admit, run,
+                                       lambda args: args, (sel, count, tau))
         return (sel, count, admitted + env_admit.astype(jnp.int32),
-                blocks_run + any_admit.astype(jnp.int32)), None
+                blocks_run + any_admit.astype(jnp.int32), tau), None
 
     # Unfilled slots hold n-1, matching _compact_candidates' clamp, so the
     # two implementations agree bit-for-bit on every output.
     init = (jnp.full((q, budget), n - 1, jnp.int32),
             jnp.zeros((q,), jnp.int32), jnp.zeros((q,), jnp.int32),
-            jnp.zeros((), jnp.int32))
-    (sel, count, admitted, blocks_run), _ = jax.lax.scan(step, init, xs)
+            jnp.zeros((), jnp.int32), jnp.full((q,), POS_BIG, jnp.float32))
+    (sel, count, admitted, blocks_run, tau), _ = jax.lax.scan(step, init, xs)
     targets = jnp.arange(1, budget + 1, dtype=jnp.int32)
     valid = targets[None, :] <= jnp.minimum(count, budget)[:, None]
-    return sel, valid, count, admitted, blocks_run
+    return sel, valid, count, admitted, blocks_run, tau
 
 
 def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
@@ -735,7 +866,9 @@ def _refine_batch(index: BallForest, qs: dict, sel: Array, valid: Array,
 
 def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
                            p_guarantee: Array | None, block_rows: int,
-                           streaming: bool = True, with_stats: bool = False):
+                           streaming: bool = True, with_stats: bool = False,
+                           fused: bool = True,
+                           env_block_rows: int | None = None):
     if k > index.n:
         # The streaming merge always has >= k columns, so without this guard
         # a too-large k would silently return sentinel rows as "exact".
@@ -767,37 +900,59 @@ def _knn_search_batch_core(index: BallForest, ys: Array, k: int, budget: int,
     # ---- phase 3+4: streaming prune + compact (block-skip from envelopes),
     # then one batched refine ----
     if streaming:
-        (sel, valid, num_candidates, env_admitted,
-         blocks_run) = _stream_prune_compact(index, qs, qb, budget,
-                                             block_rows)
+        (sel, valid, num_candidates, env_admitted, blocks_run,
+         tau) = _stream_prune_compact(index, qs, qb, budget, block_rows,
+                                      fused=fused,
+                                      env_block_rows=env_block_rows,
+                                      with_tau=with_stats and fused)
     else:
         # Reference path: materialized (n, q) mask + (q, n) cumsum.
         mask = _candidate_mask_batch(index, qs, qb, block_rows)
         sel, valid, num_candidates = _compact_candidates(mask, budget)
         env_admitted = jnp.zeros((ys.shape[0],), jnp.int32)
         blocks_run = jnp.zeros((), jnp.int32)
+        tau = jnp.full((ys.shape[0],), POS_BIG, jnp.float32)
     ids, dists = _refine_batch(index, qs, sel, valid, k)
     res = SearchResult(ids=ids, dists=dists,
                        exact=num_candidates <= budget,
                        num_candidates=num_candidates)
-    return (res, env_admitted, blocks_run) if with_stats else res
+    return (res, env_admitted, blocks_run, tau) if with_stats else res
 
 
-@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows",
+                                             "env_block_rows"))
 def _knn_search_batch_jit(index: BallForest, ys: Array, k: int, budget: int,
-                          block_rows: int) -> SearchResult:
-    return _knn_search_batch_core(index, ys, k, budget, None, block_rows)
+                          block_rows: int,
+                          env_block_rows: int | None = None) -> SearchResult:
+    return _knn_search_batch_core(index, ys, k, budget, None, block_rows,
+                                  env_block_rows=env_block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows",
+                                             "env_block_rows"))
+def _knn_search_batch_unfused_jit(
+    index: BallForest, ys: Array, k: int, budget: int, block_rows: int,
+    env_block_rows: int | None = None,
+) -> SearchResult:
+    """The two-kernel streamed pipeline (separate UB + prune kernels,
+    per-step envelope windows) — kept compiled as the fused path's A/B
+    comparator for benchmarks and parity tests."""
+    return _knn_search_batch_core(index, ys, k, budget, None, block_rows,
+                                  fused=False, env_block_rows=env_block_rows)
 
 
 def knn_search_batch(index, ys: Array, k: int, budget: int,
                      block_rows: int | None = None,
-                     validate: bool = True) -> SearchResult:
-    """Exact kNN for a (q, d) query block — one jitted program, all fields (q, ...)."""
+                     validate: bool = True,
+                     env_block_rows: int | None = None) -> SearchResult:
+    """Exact kNN for a (q, d) query block — one jitted program, (q, ...) fields."""
     index = _as_forest(index, k)
     if validate:
         validate_queries(index.family, ys)
-    return _knn_search_batch_jit(index, ys, k, budget,
-                                 resolve_block_rows(block_rows, index.n))
+    br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
+                            storage=index.storage)
+    return _knn_search_batch_jit(index, ys, k, budget, br,
+                                 resolve_env_block_rows(env_block_rows))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
@@ -817,9 +972,10 @@ def knn_search_batch_approx(
     index = _as_forest(index, k)
     if validate:
         validate_queries(index.family, ys)
+    br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
+                            storage=index.storage)
     return _knn_search_batch_approx_jit(index, ys, k, budget, p_guarantee,
-                                        resolve_block_rows(block_rows,
-                                                           index.n))
+                                        br)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
@@ -851,8 +1007,9 @@ def knn_search_batch_stats(index, ys: Array, k: int, budget: int,
     hot path.
     """
     index = _as_forest(index, k)
-    br = resolve_block_rows(block_rows, index.n)
-    res, env_admitted, blocks_run = _knn_search_batch_stats_jit(
+    br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
+                            storage=index.storage)
+    res, env_admitted, blocks_run, tau = _knn_search_batch_stats_jit(
         index, ys, k, budget, br)
     bn, nb = _block_layout(index.n, br)
     tiles = nb * ys.shape[0]
@@ -863,6 +1020,10 @@ def knn_search_batch_stats(index, ys: Array, k: int, budget: int,
         "env_admitted_tiles": int(jnp.sum(env_admitted)),
         "block_skip_rate": 1.0 - float(jnp.sum(env_admitted)) / tiles,
         "whole_block_skip_rate": 1.0 - int(blocks_run) / nb,
+        # Tightest filter UB among admitted rows, per query — an upper
+        # bound on the true kNN distance, a byproduct of the fused
+        # kernel's VMEM-resident UB tile (no extra HBM traffic).
+        "tau_admit": tau,
     }
     return res, stats
 

@@ -224,7 +224,7 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
         # The replicated envelope tables are GLOBAL; this shard's rows
         # start at axis_index * local_n of the padded global layout.
         offset = jax.lax.axis_index(axis).astype(jnp.int32) * local.n
-        sel_c, valid, ncand, _, _ = _stream_prune_compact(
+        sel_c, valid, ncand, _, _, _ = _stream_prune_compact(
             local, qs, qb, budget, block_rows, row_offset=offset)
         ids, dists = _refine_batch(local, qs, sel_c, valid, k)
 
@@ -298,7 +298,9 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     qv = (queries if isinstance(queries, QueryView)
           else query_subview(forest.partition, queries))
     local_n = sharded.local_n
-    block_rows = resolve_block_rows(block_rows, sharded.global_live_n)
+    block_rows = resolve_block_rows(block_rows, sharded.global_live_n,
+                                    q=qv.y.shape[0],
+                                    storage=forest.storage)
     b = max(min(int(budget), local_n), k)
     arrs = {f: getattr(forest, f)
             for f in point_fields(forest) + REPLICATED_FIELDS}

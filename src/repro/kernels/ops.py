@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from . import ref
 from . import bregman_ub as _ub
 from . import bregman_dist as _dist
+from . import bregman_fused as _fused
 from . import bregman_prune as _prune
 from . import pccp_corr as _corr
 from . import flash_attention as _flash
@@ -130,6 +131,58 @@ def bregman_prune_block_quant(amin_q, amin_scale, amin_zp, gmax_q,
     return _prune.bregman_prune_mask_quant(
         amin_q, amin_scale, amin_zp, gmax_q, gmax_scale, gmax_zp,
         qconst, sqrt_delta, qb, interpret=(mode == "interpret"))
+
+
+def bregman_filter_prune_block(alpha, sqrt_gamma, amin, gmax, qconst,
+                               sqrt_delta, qb, impl=None):
+    """Fused filter UB + Theorem-3 admit for a row block -> (ub, admit).
+
+    One VMEM-resident pass computes the (n, q) f32 upper-bound tile AND the
+    (n, q) int32 admit mask (core/search._stream_prune_compact's fused
+    path): the UB values never round-trip through HBM between the filter
+    and prune phases, and the transposed ``sqrt_delta`` tile is read once
+    for both.  Callers that only need the admit mask discard ``ub`` — in
+    ``ref`` mode XLA dead-code-eliminates the matmul; on TPU the kernel
+    computes it in the same pass (that is the point).
+    """
+    if qconst.ndim != 2 or sqrt_delta.ndim != 2 or qb.ndim != 2:
+        raise ValueError(
+            "bregman_filter_prune_block wants (q, M) query operands, got "
+            f"{qconst.shape}/{sqrt_delta.shape}/{qb.shape}")
+    if alpha.shape != amin.shape:
+        raise ValueError(
+            "filter and corner tables must share (n, M), got "
+            f"{alpha.shape} vs {amin.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_filter_prune(alpha, sqrt_gamma, amin, gmax,
+                                        qconst, sqrt_delta, qb)
+    qsum = jnp.sum(qconst, axis=-1)
+    return _fused.bregman_filter_prune(alpha, sqrt_gamma, amin, gmax, qsum,
+                                       qconst, sqrt_delta, qb,
+                                       interpret=(mode == "interpret"))
+
+
+def bregman_filter_prune_block_quant(alpha_q, alpha_scale, alpha_zp, sg_q,
+                                     sg_scale, sg_zp, amin_q, amin_scale,
+                                     amin_zp, gmax_q, gmax_scale, gmax_zp,
+                                     qconst, sqrt_delta, qb, impl=None):
+    """Fused (ub, admit) from int8 filter + corner codes (per-row affine)."""
+    if qconst.ndim != 2 or sqrt_delta.ndim != 2 or qb.ndim != 2:
+        raise ValueError(
+            "bregman_filter_prune_block_quant wants (q, M) query operands, "
+            f"got {qconst.shape}/{sqrt_delta.shape}/{qb.shape}")
+    mode = _impl(impl)
+    if mode == "ref":
+        return ref.bregman_filter_prune_quant(
+            alpha_q, alpha_scale, alpha_zp, sg_q, sg_scale, sg_zp,
+            amin_q, amin_scale, amin_zp, gmax_q, gmax_scale, gmax_zp,
+            qconst, sqrt_delta, qb)
+    qsum = jnp.sum(qconst, axis=-1)
+    return _fused.bregman_filter_prune_quant(
+        alpha_q, alpha_scale, alpha_zp, sg_q, sg_scale, sg_zp,
+        amin_q, amin_scale, amin_zp, gmax_q, gmax_scale, gmax_zp,
+        qsum, qconst, sqrt_delta, qb, interpret=(mode == "interpret"))
 
 
 def bregman_refine(rows, grad, c_y, family: str, impl=None):

@@ -83,6 +83,36 @@ def bregman_prune_mask_quant(amin_q: Array, amin_scale: Array,
     return bregman_prune_mask(amin, gmax, qconst, sqrt_delta, qb)
 
 
+def bregman_filter_prune(alpha: Array, sqrt_gamma: Array, amin: Array,
+                         gmax: Array, qconst: Array, sqrt_delta: Array,
+                         qb: Array) -> tuple[Array, Array]:
+    """Fused filter+prune oracle: (ub (n, q), admit (n, q)).
+
+    Composes the two single-phase oracles verbatim, so the fused kernel's
+    bit-parity with the two-kernel path is checked against EXACTLY the
+    arithmetic the unfused pipeline runs — by construction, not by
+    tolerance.
+    """
+    return (bregman_ub_matrix(alpha, sqrt_gamma, qconst, sqrt_delta),
+            bregman_prune_mask(amin, gmax, qconst, sqrt_delta, qb))
+
+
+def bregman_filter_prune_quant(alpha_q: Array, alpha_scale: Array,
+                               alpha_zp: Array, sg_q: Array, sg_scale: Array,
+                               sg_zp: Array, amin_q: Array, amin_scale: Array,
+                               amin_zp: Array, gmax_q: Array,
+                               gmax_scale: Array, gmax_zp: Array,
+                               qconst: Array, sqrt_delta: Array,
+                               qb: Array) -> tuple[Array, Array]:
+    """Fused (ub, admit) oracle over the int8 filter + corner code tables."""
+    return (bregman_ub_matrix_quant(alpha_q, alpha_scale, alpha_zp,
+                                    sg_q, sg_scale, sg_zp,
+                                    qconst, sqrt_delta),
+            bregman_prune_mask_quant(amin_q, amin_scale, amin_zp,
+                                     gmax_q, gmax_scale, gmax_zp,
+                                     qconst, sqrt_delta, qb))
+
+
 def bregman_refine_batch_quant(codes: Array, scale: Array, zp: Array,
                                grad: Array, c_y: Array, family: str) -> Array:
     """Fused dequantize + exact D_f over int8 candidate rows.

@@ -1,0 +1,365 @@
+"""Block-size autotuner for the streaming batched kNN pipeline.
+
+BrePartition sized its unit of I/O (the disk page) to the storage
+hierarchy; our unit is the ``block_rows`` VMEM block of the two streaming
+scans plus the ``env_block_rows`` granularity of the envelope gate
+(core/search).  Both are pure performance knobs — every setting returns
+bit-identical results (tests/test_stream_prune.py pins this) — so the
+right values are an empirical property of (n, q, d, M, storage, backend),
+exactly the kind of thing a table should record instead of a hand-picked
+module constant.
+
+The sweep measures each candidate two ways, mirroring how the knob
+actually costs:
+
+* ``memory_analysis`` on the compiled program (abstract
+  ShapeDtypeStruct index arrays — no data, no k-means) bounds the peak
+  temp bytes, used to REJECT candidates whose working set exceeds the
+  ``--mem-cap`` budget before any timing runs;
+* median wall clock of the full jitted pipeline on synthetic data picks
+  the winner among the survivors.
+
+Results land in a checked-in JSON artifact (``block_rows_table.json``
+next to this module).  ``core.search.resolve_block_rows`` consults it
+whenever a caller passes ``block_rows=None``, and the serving layer
+(serve/retrieval.py tenant registration, serve/knnlm.py datastore build)
+resolves and PINS the tuned value up front so every later launch reuses
+the same compiled program.  Lookups are bucketed by round(log2(n)) and
+round(log2(q)) and filtered by (backend, storage); a miss — including any
+backend the table was not generated on — falls back to
+``DEFAULT_BLOCK_ROWS``, so shipping a CPU-generated table can never
+change TPU behavior until someone regenerates it there.
+
+Regenerate with::
+
+    PYTHONPATH=src python -m repro.launch.autotune \\
+        --out src/repro/launch/block_rows_table.json
+
+See docs/autotuning.md for the table format and workflow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import math
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TABLE_PATH = Path(__file__).resolve().parent / "block_rows_table.json"
+
+# The candidate grid the sweep explores (clamped to the index size at
+# layout time, so oversized candidates degenerate to one block).
+CANDIDATE_BLOCK_ROWS = (1024, 2048, 4096, 8192, 16384)
+CANDIDATE_ENV_BLOCK_ROWS = (256, 512, 1024)
+
+# A tuned entry further than this (in log2 n) from the queried shape is
+# treated as a miss: a block size tuned for n=4096 says nothing about
+# n=10^8.
+MAX_N_LOG2_DISTANCE = 2.0
+
+
+# ---------------------------------------------------------------------------
+# Abstract compile / memory analysis
+# ---------------------------------------------------------------------------
+
+def forest_spec(n: int, d: int = 32, m: int = 8, c: int = 64,
+                storage: str = "f32",
+                family: str = "squared_euclidean",
+                beta_samples: int = 1024):
+    """A shape-only BallForest for aval lowering (no data, no k-means).
+
+    The int8 tier swaps the point tables to int8 codes and adds the
+    per-row decode scalars, matching core/index.point_fields.
+    """
+    from repro.core.index import ENV_BLOCK_ROWS, QUANT_FIELDS, BallForest
+    from repro.core.transform import make_partition
+    part = make_partition(d, m)
+    w = part.width
+    ne = -(-n // ENV_BLOCK_ROWS)
+    f32, i32, i8 = jnp.float32, jnp.int32, jnp.int8
+    sds = jax.ShapeDtypeStruct
+    pt = i8 if storage == "int8" else f32
+    fields = dict(
+        data=sds((n, d), pt),
+        point_ids=sds((n,), i32),
+        alpha=sds((n, m), pt),
+        sqrt_gamma=sds((n, m), pt),
+        assign=sds((n, m), i32),
+        alpha_min=sds((m, c), f32),
+        sqrt_gamma_max=sds((m, c), f32),
+        counts=sds((m, c), i32),
+        centers=sds((m, c, w), f32),
+        beta_samples=sds((beta_samples,), f32),
+        alpha_min_pt=sds((n, m), pt),
+        sqrt_gamma_max_pt=sds((n, m), pt),
+        gamma_edges=sds((m, 3), f32),
+        env_alpha_min=sds((ne, m), f32),
+        env_sqrt_gamma_max=sds((ne, m), f32),
+    )
+    if storage == "int8":
+        fields.update({f: sds((n,), f32) for f in QUANT_FIELDS})
+    return BallForest(family_name=family, partition=part, num_clusters=c,
+                      storage=storage, **fields)
+
+
+def measure_memory(n: int, q: int, d: int, m: int, storage: str,
+                   block_rows: int, env_block_rows: int,
+                   k: int = 10, budget: int = 256) -> int | None:
+    """Peak temp bytes of the compiled pipeline at this config, or None
+    when the backend exposes no compiled memory analysis."""
+    from repro.core import search
+    spec = forest_spec(n, d=d, m=m, storage=storage)
+    ys = jax.ShapeDtypeStruct((q, d), jnp.float32)
+    compiled = search._knn_search_batch_jit.lower(
+        spec, ys, k, budget, block_rows, env_block_rows).compile()
+    try:
+        mem = compiled.memory_analysis()
+        return int(mem.temp_size_in_bytes)
+    except (AttributeError, NotImplementedError, jax.errors.JaxRuntimeError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock sweep
+# ---------------------------------------------------------------------------
+
+def _synthetic_index(n: int, d: int, m: int, storage: str, seed: int = 0):
+    """Blob data index at the bench shape family (bench_batch_search)."""
+    from repro.core.index import build_index
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.5, 4.0, size=(128, d))
+    rows = centers[rng.integers(0, 128, size=n)]
+    rows = rows + rng.normal(0.0, 0.08, size=rows.shape)
+    data = np.abs(rows) + 0.05
+    return build_index(data, "squared_euclidean", m=m,
+                       quantize=(storage == "int8"))
+
+
+def time_config(index, ys, k: int, budget: int, block_rows: int,
+                env_block_rows: int, repeats: int = 3) -> float:
+    """Median seconds per call of the full jitted pipeline (post-warmup)."""
+    from repro.core import search
+    fn = functools.partial(search._knn_search_batch_jit, index, ys, k,
+                           budget, block_rows, env_block_rows)
+    jax.block_until_ready(fn())                       # compile + warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+@dataclasses.dataclass
+class SweepConfig:
+    ns: tuple = (4096, 16384, 65536)
+    qs: tuple = (8, 64)
+    d: int = 32
+    m: int = 8
+    k: int = 10
+    storages: tuple = ("f32", "int8")
+    block_rows_candidates: tuple = CANDIDATE_BLOCK_ROWS
+    env_candidates: tuple = CANDIDATE_ENV_BLOCK_ROWS
+    repeats: int = 3
+    mem_cap_bytes: int | None = None
+    time_it: bool = True
+
+
+def sweep(cfg: SweepConfig, log=print) -> list[dict]:
+    """Run the sweep; one winning entry per (n, q, storage) cell."""
+    from repro.core import search
+    backend = jax.default_backend()
+    entries = []
+    for storage in cfg.storages:
+        for n in cfg.ns:
+            index = (_synthetic_index(n, cfg.d, cfg.m, storage)
+                     if cfg.time_it else None)
+            for q in cfg.qs:
+                rng = np.random.default_rng(1)
+                ys = jnp.asarray(
+                    np.abs(rng.normal(1.5, 0.5, size=(q, cfg.d))) + 0.05,
+                    jnp.float32)
+                budget = search.fitted_budget_for_n(n, cfg.k, n // 64)
+                best = None
+                for br in cfg.block_rows_candidates:
+                    if br > 2 * n:
+                        continue          # degenerate: > one block of slack
+                    for eb in cfg.env_candidates:
+                        temp = measure_memory(n, q, cfg.d, cfg.m, storage,
+                                              br, eb, k=cfg.k, budget=budget)
+                        if (cfg.mem_cap_bytes is not None and temp is not None
+                                and temp > cfg.mem_cap_bytes):
+                            log(f"  reject n={n} q={q} {storage} br={br} "
+                                f"eb={eb}: temp {temp} > cap")
+                            continue
+                        sec = (time_config(index, ys, cfg.k, budget, br, eb,
+                                           cfg.repeats)
+                               if cfg.time_it else float("inf"))
+                        cand = {"backend": backend, "storage": storage,
+                                "n_log2": round(math.log2(n), 2),
+                                "q_log2": round(math.log2(q), 2),
+                                "d": cfg.d, "m": cfg.m,
+                                "block_rows": br, "env_block_rows": eb,
+                                "us_per_call": round(sec * 1e6, 1),
+                                "temp_bytes": temp}
+                        log(f"  n={n} q={q} {storage} br={br} eb={eb}: "
+                            f"{cand['us_per_call']}us temp={temp}")
+                        if best is None or sec < best["_sec"]:
+                            best = {**cand, "_sec": sec}
+                if best is not None:
+                    best.pop("_sec")
+                    entries.append(best)
+                    log(f"-> n={n} q={q} {storage}: block_rows="
+                        f"{best['block_rows']} env={best['env_block_rows']}")
+    return entries
+
+
+def write_table(entries: list[dict], path: str | Path,
+                note: str = "") -> None:
+    payload = {
+        "version": 1,
+        "note": note or ("swept via `python -m repro.launch.autotune`; "
+                         "see docs/autotuning.md"),
+        "jax": jax.__version__,
+        "entries": entries,
+    }
+    Path(path).write_text(json.dumps(payload, indent=1) + "\n")
+    _load_table_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Lookup (the consumer side: resolve_block_rows + the serving layer)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _load_table_cached(path_str: str) -> tuple:
+    path = Path(path_str)
+    if not path.exists():
+        return ()
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return ()
+    entries = payload.get("entries", [])
+    return tuple(e for e in entries if isinstance(e, dict))
+
+
+def load_table(path: str | Path | None = None) -> tuple:
+    """The checked-in entries (cached); env REPRO_AUTOTUNE_TABLE overrides
+    the path, an empty/missing/corrupt file reads as no entries."""
+    if path is None:
+        path = os.environ.get("REPRO_AUTOTUNE_TABLE", DEFAULT_TABLE_PATH)
+    return _load_table_cached(str(path))
+
+
+def lookup(n: int, q: int | None = None, *, storage: str | None = None,
+           backend: str | None = None, table: tuple | None = None
+           ) -> dict | None:
+    """Nearest tuned entry for this shape, or None (= use the default).
+
+    Entries are filtered to this backend and storage tier, then ranked by
+    log2 distance in n (primary) and q (secondary, when the caller knows
+    q).  Misses by more than MAX_N_LOG2_DISTANCE in n are rejected — a
+    table generated at bench scale must not steer shapes far outside it.
+    """
+    if n < 1:
+        return None
+    entries = load_table() if table is None else table
+    if not entries:
+        return None
+    backend = backend or jax.default_backend()
+    storage = storage or "f32"
+    n_l = math.log2(n)
+    q_l = math.log2(q) if q else None
+    best, best_key = None, None
+    for e in entries:
+        if e.get("backend") != backend or e.get("storage") != storage:
+            continue
+        try:
+            dn = abs(n_l - float(e["n_log2"]))
+            dq = (abs(q_l - float(e["q_log2"]))
+                  if q_l is not None and "q_log2" in e else 0.0)
+            br = int(e["block_rows"])
+        except (KeyError, TypeError, ValueError):
+            continue
+        if dn > MAX_N_LOG2_DISTANCE or br < 8:
+            continue
+        key = (dn, dq)
+        if best_key is None or key < best_key:
+            best, best_key = e, key
+    return best
+
+
+def lookup_block_rows(n: int, q: int | None = None, *,
+                      storage: str | None = None,
+                      backend: str | None = None,
+                      table: tuple | None = None) -> int | None:
+    """Tuned ``block_rows`` for this shape, or None for the default."""
+    e = lookup(n, q, storage=storage, backend=backend, table=table)
+    return int(e["block_rows"]) if e is not None else None
+
+
+def lookup_env_block_rows(n: int, q: int | None = None, *,
+                          storage: str | None = None,
+                          backend: str | None = None,
+                          table: tuple | None = None) -> int | None:
+    """Tuned envelope-gate granularity for this shape, or None."""
+    e = lookup(n, q, storage=storage, backend=backend, table=table)
+    if e is None or "env_block_rows" not in e:
+        return None
+    return int(e["env_block_rows"])
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", default=str(DEFAULT_TABLE_PATH))
+    p.add_argument("--n", type=int, nargs="+", default=[4096, 16384, 65536])
+    p.add_argument("--q", type=int, nargs="+", default=[8, 64])
+    p.add_argument("--d", type=int, default=32)
+    p.add_argument("--m", type=int, default=8)
+    p.add_argument("--k", type=int, default=10)
+    p.add_argument("--storages", nargs="+", default=["f32", "int8"])
+    p.add_argument("--block-rows", type=int, nargs="+",
+                   default=list(CANDIDATE_BLOCK_ROWS))
+    p.add_argument("--env-block-rows", type=int, nargs="+",
+                   default=list(CANDIDATE_ENV_BLOCK_ROWS))
+    p.add_argument("--repeats", type=int, default=3)
+    p.add_argument("--mem-cap-mib", type=float, default=None,
+                   help="reject candidates whose compiled temp bytes "
+                        "exceed this (e.g. a VMEM/HBM budget)")
+    p.add_argument("--no-time", action="store_true",
+                   help="memory analysis only (records temp bytes, keeps "
+                        "the first surviving candidate per cell)")
+    args = p.parse_args(argv)
+
+    cfg = SweepConfig(
+        ns=tuple(args.n), qs=tuple(args.q), d=args.d, m=args.m, k=args.k,
+        storages=tuple(args.storages),
+        block_rows_candidates=tuple(args.block_rows),
+        env_candidates=tuple(args.env_block_rows),
+        repeats=args.repeats,
+        mem_cap_bytes=(None if args.mem_cap_mib is None
+                       else int(args.mem_cap_mib * 2**20)),
+        time_it=not args.no_time,
+    )
+    print(f"sweeping on backend={jax.default_backend()} -> {args.out}")
+    entries = sweep(cfg)
+    write_table(entries, args.out)
+    print(f"wrote {len(entries)} entries to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -138,6 +138,13 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
                       np.float32)
     vals = np.asarray(corpus_tokens[:, 1:].reshape(-1), np.int32)
     index = build_index(keys, family, m=m, quantize=quantize, seed=seed)
+    if block_rows is None:
+        # Pin the autotuned streaming block size once at build time (same
+        # policy as serve.retrieval.register_tenant): hook batches are
+        # small, so key the lookup on a typical decode-tick row count.
+        from repro.launch import autotune
+        block_rows = autotune.lookup_block_rows(
+            max(index.n, 1), 8, storage=index.storage)
     return Datastore(index=index, next_tokens=vals,
                      hidden_dim=keys.shape[-1], block_rows=block_rows)
 

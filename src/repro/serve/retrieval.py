@@ -79,6 +79,7 @@ from repro.core import search as bp
 from repro.core.bregman import validate_rows
 from repro.core.segments import SegmentedForest
 from repro.dist import knn as dist_knn
+from repro.launch import autotune
 
 from .faults import FaultPlan, SystemClock, jittered_backoff
 
@@ -221,6 +222,10 @@ class Tenant:
         default_factory=lambda: np.empty((0,), np.int32))
     sharded: object = None          # dist.knn.ShardedForest | None
     mesh: object = None
+    # Streaming-scan block size, resolved from the autotuner table ONCE at
+    # registration (launch/autotune.py) so every launch for this tenant
+    # reuses the same compiled program; None = DEFAULT_BLOCK_ROWS.
+    block_rows: int | None = None
 
     @property
     def live_n(self) -> int:
@@ -333,6 +338,14 @@ class RetrievalService:
         sharded = None
         if mesh is not None:
             sharded = dist_knn.shard_index(index, mesh, axis)
+        # Pin the tuned block size now: the table lookup keys on the live
+        # row count, the service's largest query bucket (the steady-state
+        # heavy-traffic shape) and the storage tier.  A table miss pins
+        # None and the search layer uses its default.
+        live_n = int(getattr(index, "live_n", index.n))
+        block_rows = autotune.lookup_block_rows(
+            max(live_n, 1), max(self.config.buckets),
+            storage=getattr(index, "storage", None))
         tenant = Tenant(
             name=name, index=index, family=fam,
             family_name=index.family_name,
@@ -342,7 +355,7 @@ class RetrievalService:
             p_guarantee=(self.config.default_p_guarantee
                          if p_guarantee is None else float(p_guarantee)),
             degraded=quarantined.size > 0, quarantined=quarantined,
-            sharded=sharded, mesh=mesh)
+            sharded=sharded, mesh=mesh, block_rows=block_rows)
         self.tenants[name] = tenant
         return tenant
 
@@ -675,6 +688,7 @@ class RetrievalService:
                 lambda: dist_knn.distributed_knn(
                     tenant.sharded, ys,
                     family=tenant.family_name, k=k, budget=budget,
+                    block_rows=tenant.block_rows,
                     approx_p=(p if approx else None),
                     stop_retry=stop_retry,
                     launch_hook=tenant.cost.observe,
@@ -687,6 +701,7 @@ class RetrievalService:
             res = self._launch(
                 tenant, tier,
                 lambda: bp.knn_search_batch(snapshot, ys, k, budget,
+                                            block_rows=tenant.block_rows,
                                             validate=False))
             return res, False, budget
 
@@ -697,11 +712,13 @@ class RetrievalService:
                 res = self._launch(
                     tenant, tier,
                     lambda: bp.knn_search_batch_approx(
-                        snapshot, ys, k, b, np.float32(p), validate=False))
+                        snapshot, ys, k, b, np.float32(p),
+                        block_rows=tenant.block_rows, validate=False))
             else:
                 res = self._launch(
                     tenant, tier,
                     lambda: bp.knn_search_batch(snapshot, ys, k, b,
+                                                block_rows=tenant.block_rows,
                                                 validate=False))
             if bool(np.asarray(res.exact).all()) or budget >= snapshot.n:
                 return res, approx, budget

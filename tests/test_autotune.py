@@ -1,0 +1,183 @@
+"""Autotuner table: lookup semantics, abstract compiles, resolve plumbing.
+
+The table is a pure perf knob (tests/test_stream_prune.py proves every
+selectable value is results-invariant); what needs pinning here is the
+LOOKUP contract — a tuned entry must only steer shapes it actually speaks
+for (same backend, same storage tier, within MAX_N_LOG2_DISTANCE of the
+tuned n) — and the consumer plumbing: ``resolve_block_rows(None, ...)``
+consults the table, the serving layer pins the result per tenant/store.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import search
+from repro.launch import autotune
+
+
+def _entry(**kw):
+    e = {"backend": jax.default_backend(), "storage": "f32",
+         "n_log2": 12.0, "q_log2": 3.0, "d": 32, "m": 8,
+         "block_rows": 2048, "env_block_rows": 512,
+         "us_per_call": 100.0, "temp_bytes": 1 << 20}
+    e.update(kw)
+    return e
+
+
+# ---------------------------------------------------------------------------
+# lookup
+# ---------------------------------------------------------------------------
+
+def test_lookup_exact_and_nearest_hit():
+    table = (_entry(n_log2=12.0, q_log2=3.0, block_rows=2048),
+             _entry(n_log2=14.0, q_log2=6.0, block_rows=8192))
+    assert autotune.lookup_block_rows(4096, 8, table=table) == 2048
+    assert autotune.lookup_block_rows(16384, 64, table=table) == 8192
+    # nearest in log2(n) wins; q breaks ties
+    assert autotune.lookup_block_rows(6000, 8, table=table) == 2048
+    assert autotune.lookup_block_rows(12000, 64, table=table) == 8192
+    # unknown q still resolves on n alone
+    assert autotune.lookup_block_rows(4096, table=table) == 2048
+    assert autotune.lookup_env_block_rows(4096, 8, table=table) == 512
+
+
+def test_lookup_rejects_far_n():
+    """An entry tuned at n=4096 must not steer n=10^8 (or an empty index)."""
+    table = (_entry(n_log2=12.0),)
+    far = 2 ** (12 + autotune.MAX_N_LOG2_DISTANCE + 1)
+    assert autotune.lookup_block_rows(int(far), 8, table=table) is None
+    assert autotune.lookup_block_rows(0, 8, table=table) is None
+
+
+def test_lookup_filters_backend_and_storage():
+    """A CPU-swept table can never change behavior on another backend, and
+    f32 entries never steer the int8 tier (different byte ratios)."""
+    table = (_entry(backend="definitely_not_this_backend"),)
+    assert autotune.lookup_block_rows(4096, 8, table=table) is None
+    table = (_entry(storage="f32"),)
+    assert autotune.lookup_block_rows(4096, 8, storage="int8",
+                                      table=table) is None
+    table = (_entry(storage="int8", block_rows=4096),)
+    assert autotune.lookup_block_rows(4096, 8, storage="int8",
+                                      table=table) == 4096
+
+
+def test_lookup_skips_malformed_entries():
+    table = ({"backend": jax.default_backend()},          # no shape keys
+             _entry(block_rows="not_an_int"),
+             _entry(block_rows=2),                        # < floor of 8
+             _entry(block_rows=1024))
+    assert autotune.lookup_block_rows(4096, 8, table=table) == 1024
+
+
+def test_load_table_missing_and_corrupt(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE",
+                       str(tmp_path / "nope.json"))
+    autotune._load_table_cached.cache_clear()
+    assert autotune.load_table() == ()
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(bad))
+    autotune._load_table_cached.cache_clear()
+    assert autotune.load_table() == ()
+    autotune._load_table_cached.cache_clear()
+
+
+def test_write_then_load_roundtrip(tmp_path, monkeypatch):
+    path = tmp_path / "table.json"
+    autotune.write_table([_entry()], path, note="test")
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    autotune._load_table_cached.cache_clear()
+    entries = autotune.load_table()
+    assert len(entries) == 1 and entries[0]["block_rows"] == 2048
+    payload = json.loads(path.read_text())
+    assert payload["version"] == 1
+    autotune._load_table_cached.cache_clear()
+
+
+def test_checked_in_table_is_well_formed():
+    """The repo ships a swept table; every entry must resolve via lookup."""
+    entries = autotune.load_table(autotune.DEFAULT_TABLE_PATH)
+    assert entries, "checked-in block_rows_table.json missing or empty"
+    for e in entries:
+        n = int(round(2 ** float(e["n_log2"])))
+        got = autotune.lookup(n, storage=e["storage"],
+                              backend=e["backend"], table=entries)
+        assert got is not None
+        assert int(got["block_rows"]) >= 8
+        assert int(got["env_block_rows"]) % 256 == 0
+
+
+# ---------------------------------------------------------------------------
+# abstract compile path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("storage", ["f32", "int8"])
+def test_forest_spec_and_measure_memory(storage):
+    """Shape-only lowering compiles without data and reports temp bytes."""
+    temp = autotune.measure_memory(2048, 8, 32, 8, storage,
+                                   block_rows=1024, env_block_rows=512,
+                                   k=5, budget=64)
+    # None only where the backend hides memory analysis; when present it
+    # must be a plausible positive working set
+    assert temp is None or temp > 0
+
+
+# ---------------------------------------------------------------------------
+# consumer plumbing
+# ---------------------------------------------------------------------------
+
+def test_resolve_block_rows_consults_table(tmp_path, monkeypatch):
+    path = tmp_path / "table.json"
+    autotune.write_table(
+        [_entry(n_log2=12.0, q_log2=3.0, block_rows=1536)], path)
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    autotune._load_table_cached.cache_clear()
+    try:
+        assert search.resolve_block_rows(None, 4096, q=8,
+                                         storage="f32") == 1536
+        # explicit knob always wins over the table
+        assert search.resolve_block_rows(777, 4096, q=8,
+                                         storage="f32") == 777
+        # miss (far n / foreign storage) falls back to the default
+        assert search.resolve_block_rows(
+            None, 4096, q=8, storage="int8") == search.DEFAULT_BLOCK_ROWS
+        assert search.resolve_block_rows(
+            None, 10 ** 9, q=8, storage="f32") == search.DEFAULT_BLOCK_ROWS
+        # empty index still raises BEFORE any table consultation
+        with pytest.raises(ValueError, match="empty"):
+            search.resolve_block_rows(None, 0, q=8, storage="f32")
+    finally:
+        autotune._load_table_cached.cache_clear()
+
+
+def test_search_results_identical_with_and_without_table(tmp_path,
+                                                         monkeypatch):
+    """End to end: a table pick changes the program, never the answer."""
+    import jax.numpy as jnp
+    from repro.core.index import build_index
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(600, 16)).astype(np.float32)
+    index = build_index(data, "squared_euclidean", m=4, num_clusters=8,
+                        seed=0)
+    ys = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    base = search.knn_search_batch(index, ys, 5, 64,
+                                   block_rows=search.DEFAULT_BLOCK_ROWS)
+    path = tmp_path / "table.json"
+    autotune.write_table(
+        [_entry(n_log2=9.23, q_log2=2.0, block_rows=128,
+                env_block_rows=512)], path)
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    autotune._load_table_cached.cache_clear()
+    try:
+        assert search.resolve_block_rows(None, index.n, q=4,
+                                         storage=index.storage) == 128
+        tuned = search.knn_search_batch(index, ys, 5, 64)
+        for f in ("ids", "dists", "exact", "num_candidates"):
+            np.testing.assert_array_equal(np.asarray(getattr(tuned, f)),
+                                          np.asarray(getattr(base, f)))
+    finally:
+        autotune._load_table_cached.cache_clear()

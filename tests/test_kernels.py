@@ -10,6 +10,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
 from repro.kernels.bregman_ub import bregman_ub_matrix, bregman_ub_matrix_quant
+from repro.kernels.bregman_fused import (bregman_filter_prune,
+                                         bregman_filter_prune_quant)
 from repro.kernels.bregman_prune import (bregman_prune_mask,
                                          bregman_prune_mask_quant)
 from repro.kernels.bregman_dist import bregman_refine
@@ -132,6 +134,90 @@ def test_prune_quant_kernel_property(n, m, q, seed):
     want = ref.bregman_prune_mask_quant(a_q, a_s, a_z, g_q, g_s, g_z,
                                         qc, sd, qb)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# bregman_fused (one-pass filter UB + Theorem-3 admit)
+# ---------------------------------------------------------------------------
+
+def _fused_inputs(rng, n, m, q):
+    alpha = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    sg = jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32)
+    amin, gmax, qc, sd, qb = _prune_inputs(rng, n, m, q)
+    return alpha, sg, amin, gmax, qc, sd, qb
+
+
+@pytest.mark.parametrize("n,m,q", [(64, 8, 1), (100, 28, 3), (257, 50, 5),
+                                   (32, 1, 1), (7, 5, 2)])
+def test_fused_kernel_shapes(n, m, q):
+    """Fused (ub, admit) == (ub kernel, prune kernel) at odd shapes.
+
+    ``ub`` is allclose to the standalone UB kernel; ``admit`` must be
+    BIT-IDENTICAL to the standalone prune kernel (the streaming scan's
+    compaction consumes it, so any drift changes SearchResult).
+    """
+    rng = np.random.default_rng(0)
+    alpha, sg, amin, gmax, qc, sd, qb = _fused_inputs(rng, n, m, q)
+    qsum = jnp.sum(qc, -1)
+    ub, admit = bregman_filter_prune(alpha, sg, amin, gmax, qsum, qc, sd, qb,
+                                     block_n=32, block_q=4, interpret=True)
+    ub_ref, admit_ref = ref.bregman_filter_prune(alpha, sg, amin, gmax,
+                                                 qc, sd, qb)
+    np.testing.assert_allclose(np.asarray(ub), np.asarray(ub_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(admit), np.asarray(admit_ref))
+    assert admit.dtype == jnp.int32
+    # the admit half must match the standalone prune kernel bit for bit
+    solo = bregman_prune_mask(amin, gmax, qc, sd, qb,
+                              block_n=32, block_q=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(admit), np.asarray(solo))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_fused_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    alpha, sg, amin, gmax, qc, sd, qb = _fused_inputs(rng, n, m, q)
+    ub, admit = bregman_filter_prune(alpha, sg, amin, gmax,
+                                     jnp.sum(qc, -1), qc, sd, qb,
+                                     interpret=True)
+    ub_ref, admit_ref = ref.bregman_filter_prune(alpha, sg, amin, gmax,
+                                                 qc, sd, qb)
+    np.testing.assert_allclose(np.asarray(ub), np.asarray(ub_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(admit), np.asarray(admit_ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.integers(1, 40), q=st.integers(1, 6),
+       seed=st.integers(0, 1000))
+def test_fused_quant_kernel_property(n, m, q, seed):
+    rng = np.random.default_rng(seed)
+    a_q, a_s, a_z = qz.quantize_stats(
+        jnp.asarray(rng.normal(size=(n, m)), jnp.float32))
+    g_q, g_s, g_z = qz.quantize_stats(
+        jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32))
+    am_q, am_s, am_z = qz.quantize_stats(
+        jnp.asarray(rng.normal(size=(n, m)), jnp.float32), "floor")
+    gm_q, gm_s, gm_z = qz.quantize_stats(
+        jnp.asarray(np.abs(rng.normal(size=(n, m))), jnp.float32), "ceil")
+    qc = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    sd = jnp.asarray(np.abs(rng.normal(size=(q, m))), jnp.float32)
+    qb = jnp.asarray(rng.normal(size=(q, m)), jnp.float32)
+    ub, admit = bregman_filter_prune_quant(
+        a_q, a_s, a_z, g_q, g_s, g_z, am_q, am_s, am_z, gm_q, gm_s, gm_z,
+        jnp.sum(qc, -1), qc, sd, qb, interpret=True)
+    ub_ref, admit_ref = ref.bregman_filter_prune_quant(
+        a_q, a_s, a_z, g_q, g_s, g_z, am_q, am_s, am_z, gm_q, gm_s, gm_z,
+        qc, sd, qb)
+    np.testing.assert_allclose(np.asarray(ub), np.asarray(ub_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(admit), np.asarray(admit_ref))
+    # bit-parity with the standalone quantized prune kernel
+    solo = bregman_prune_mask_quant(am_q, am_s, am_z, gm_q, gm_s, gm_z,
+                                    qc, sd, qb, interpret=True)
+    np.testing.assert_array_equal(np.asarray(admit), np.asarray(solo))
 
 
 # ---------------------------------------------------------------------------

@@ -244,6 +244,29 @@ def test_resolve_block_rows_validation():
         search.resolve_block_rows(64, 0)
 
 
+def test_resolve_block_rows_empty_index_fires_on_default_path():
+    """Regression: the n < 1 guard must fire when block_rows is None too.
+
+    It used to sit below the ``block_rows is None`` early-return, so the
+    default-knob path (the common one) sailed past an empty index and died
+    later inside the scan with an opaque shape error.
+    """
+    with pytest.raises(ValueError, match="empty"):
+        search.resolve_block_rows(None, 0)
+    with pytest.raises(ValueError, match="empty"):
+        search.resolve_block_rows(None, -3, q=4, storage="f32")
+
+
+def test_resolve_env_block_rows_validation():
+    eb = ENV_BLOCK_ROWS
+    assert search.resolve_env_block_rows(None) == eb
+    assert search.resolve_env_block_rows(eb) == eb
+    assert search.resolve_env_block_rows(4 * eb) == 4 * eb
+    for bad in (0, eb // 2, eb + 1, 3 * eb // 2, True):
+        with pytest.raises(ValueError, match="env_block_rows"):
+            search.resolve_env_block_rows(bad)
+
+
 def test_knn_batch_and_hook_forward_block_rows(monkeypatch):
     """The knob reaches the jit core from knn_batch and from KNNLMHook."""
     from repro.serve.knnlm import Datastore, KNNLMHook
@@ -252,9 +275,9 @@ def test_knn_batch_and_hook_forward_block_rows(monkeypatch):
     seen = []
     real = search._knn_search_batch_jit
 
-    def spy(index, ys, k, budget, block_rows):
+    def spy(index, ys, k, budget, block_rows, env_block_rows=None):
         seen.append(block_rows)
-        return real(index, ys, k, budget, block_rows)
+        return real(index, ys, k, budget, block_rows, env_block_rows)
 
     monkeypatch.setattr(search, "_knn_search_batch_jit", spy)
     search.knn_batch(index, queries, K, budget=64, block_rows=128)
@@ -269,3 +292,84 @@ def test_knn_batch_and_hook_forward_block_rows(monkeypatch):
     hook = KNNLMHook(store=store, k=K, lam=0.5, block_rows=192)
     hook(jnp.zeros((2, 32)), jnp.asarray(np.asarray(queries)[:2]))
     assert seen[-1] == 192         # per-hook override wins
+
+
+# ---------------------------------------------------------------------------
+# Fused filter+prune scan vs the two-kernel scan vs the reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("family", family_names())
+def test_fused_scan_matches_unfused_and_reference(family, quantize):
+    """The fused-kernel scan (default) == two-kernel scan == reference.
+
+    The fused path also swaps the per-step windowed envelope gate for the
+    hoisted whole-table gate, so this pins BOTH changes to bit-parity.
+    """
+    index, queries = _built(family, quantize)
+    budget = 64
+    br = search.resolve_block_rows(BLOCK_ROWS, index.n)
+    eb = search.resolve_env_block_rows(None)
+    fused = search._knn_search_batch_jit(index, queries, K, budget, br, eb)
+    unfused = search._knn_search_batch_unfused_jit(index, queries, K,
+                                                   budget, br, eb)
+    ref = search.knn_search_batch_reference(index, queries, K, budget,
+                                            block_rows=BLOCK_ROWS)
+    _assert_bitwise_equal(fused, unfused)
+    _assert_bitwise_equal(fused, ref)
+
+
+# ---------------------------------------------------------------------------
+# Knob sweep: every autotuner-selectable choice is results-invariant
+# ---------------------------------------------------------------------------
+
+# Autotuner candidates rescaled to the N=420 test fixture (the real
+# candidate set starts at 1024 and the sweep skips br > 2n, so at test
+# size every multi-block/misaligned/single-block regime is covered by):
+SWEEP_BLOCK_ROWS = (32, 96, 256, N)
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+@pytest.mark.parametrize("family", family_names())
+def test_block_rows_choice_never_changes_results(family, quantize):
+    """Bit-identical SearchResult for every block_rows the tuner may pick.
+
+    This is the safety property that makes the autotuner table a pure
+    perf knob: exact and approx searches must return the same ids/dists/
+    exact/num_candidates regardless of the scan's block size.
+    """
+    index, queries = _built(family, quantize)
+    budget = 64
+    base = search.knn_search_batch(index, queries, K, budget,
+                                   block_rows=search.DEFAULT_BLOCK_ROWS)
+    base_a = search.knn_search_batch_approx(index, queries, K, budget,
+                                            jnp.float32(P_APPROX),
+                                            block_rows=search.DEFAULT_BLOCK_ROWS)
+    for br in SWEEP_BLOCK_ROWS:
+        got = search.knn_search_batch(index, queries, K, budget,
+                                      block_rows=br)
+        _assert_bitwise_equal(got, base)
+        got_a = search.knn_search_batch_approx(index, queries, K, budget,
+                                               jnp.float32(P_APPROX),
+                                               block_rows=br)
+        _assert_bitwise_equal(got_a, base_a)
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_env_block_rows_choice_never_changes_results(quantize):
+    """Envelope-gate granularity is results-invariant (superset admits).
+
+    Coarsening the gate to f*ENV_BLOCK_ROWS min/maxes envelope rows
+    together — looser bounds admit a superset of blocks whose extra admit
+    tiles are provably all-zero, so compaction output is unchanged.
+    """
+    for family in ("squared_euclidean", "itakura_saito"):
+        index, queries = _built(family, quantize)
+        budget = 64
+        base = search.knn_search_batch(index, queries, K, budget,
+                                       block_rows=BLOCK_ROWS)
+        for eb in (ENV_BLOCK_ROWS, 2 * ENV_BLOCK_ROWS, 4 * ENV_BLOCK_ROWS):
+            got = search.knn_search_batch(index, queries, K, budget,
+                                          block_rows=BLOCK_ROWS,
+                                          env_block_rows=eb)
+            _assert_bitwise_equal(got, base)
