@@ -35,6 +35,7 @@ MODULES = [
     "bench_retrieval",       # retrieval-service overhead (chaos: --chaos)
     "bench_kernels",         # kernel micro-benches
     "bench_kernel_roofline",  # fused vs unfused kernel HLO roofline terms
+    "bench_recall_frontier",  # calibrated approx tier: recall-vs-QPS + ppl
 ]
 
 

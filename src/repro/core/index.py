@@ -91,6 +91,16 @@ class BallForest:
     amin_zp: Array | None = None
     gmax_scale: Array | None = None   # (n,) corner decode, ceil-rounded
     gmax_zp: Array | None = None
+    # Host-only recall calibration (core/calibrate.py RecallCalibration) —
+    # deliberately NOT part of the pytree flatten: traced code never reads
+    # it (a target_recall inverts the curve on the HOST before any launch),
+    # and keeping it out of the statics/leaves means attaching or swapping
+    # a curve can never fragment a jit cache.  It rides along through every
+    # dataclasses.replace-based index op (pad / slice / concat / shard /
+    # tombstone / quantize / envelope refresh) and comes back None from
+    # tree_unflatten — i.e. it does not survive a raw jax.tree.map
+    # round-trip, which only traced internals perform.
+    calibration: object | None = None
 
     @property
     def family(self) -> BregmanFamily:
@@ -402,6 +412,9 @@ def build_index(
     beta_sample_size: int = 4096,
     gamma_buckets: int = 4,
     quantize: bool = False,
+    calibrate: bool = False,
+    calibrate_k: int = 10,
+    calibration_queries: int = 64,
     seed: int = 0,
 ) -> BallForest:
     """Offline precomputation (paper Alg. 5): partition -> transform -> forest.
@@ -415,6 +428,12 @@ def build_index(
     buckets whose gamma spread is ~1/gamma_buckets of the ball's — strictly
     tighter, still conservative (each point belongs to exactly one bucket
     and its bucket's corner lower-bounds its distance).
+
+    ``calibrate=True`` additionally fits the per-index recall-calibration
+    curve (core/calibrate.py): measured recall@``calibrate_k`` over a
+    ``p_guarantee`` grid on ``calibration_queries`` held-out jittered
+    rows, stored host-side on :attr:`BallForest.calibration` so
+    ``target_recall`` requests can invert it (docs/accuracy.md).
 
     ``quantize=True`` builds the int8 storage tier: ``data`` is snapped to
     per-row int8 FIRST and the whole index (clustering, transforms,
@@ -541,4 +560,14 @@ def build_index(
     # Envelopes come LAST so the int8 tier reduces over the decoded
     # directed-rounded corners it will serve, not the pre-encode fp32 ones
     # (whose floor-rounding could otherwise dip below the envelope).
-    return refresh_envelopes(forest)
+    forest = refresh_envelopes(forest)
+    if calibrate:
+        # Fit over the finished index (lazy import: calibrate drives the
+        # search entry points, which import this module).
+        from . import calibrate as _calibrate
+        forest = dataclasses.replace(
+            forest,
+            calibration=_calibrate.fit_calibration(
+                forest, k=min(calibrate_k, n),
+                num_queries=calibration_queries, seed=seed))
+    return forest

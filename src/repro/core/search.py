@@ -82,6 +82,7 @@ import jax
 import jax.numpy as jnp
 
 from .bregman import get_family, validate_rows
+from .calibrate import resolve_p_guarantee
 from .index import BallForest, ENV_BLOCK_ROWS
 from .transform import q_transform
 from . import bounds
@@ -965,17 +966,30 @@ def _knn_search_batch_approx_jit(
 
 
 def knn_search_batch_approx(
-    index, ys: Array, k: int, budget: int, p_guarantee: Array,
+    index, ys: Array, k: int, budget: int, p_guarantee: Array | None = None,
     block_rows: int | None = None, validate: bool = True,
+    target_recall: float | None = None,
 ) -> SearchResult:
-    """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q."""
+    """§8 approximate kNN for a (q, d) block; CDF shrink vectorized over q.
+
+    Exactly one of ``p_guarantee`` (the raw §8 knob) and ``target_recall``
+    must be given.  ``target_recall`` inverts the index's fitted recall
+    calibration (core/calibrate.py) on the host to pick the shrink level —
+    the measured-recall contract; on an uncalibrated index it falls back
+    to ``p_guarantee = target_recall`` with a one-time warning.
+    """
     index = _as_forest(index, k)
+    if (p_guarantee is None) == (target_recall is None):
+        raise ValueError(
+            "pass exactly one of p_guarantee / target_recall")
+    if target_recall is not None:
+        p_guarantee, _ = resolve_p_guarantee(index, target_recall)
     if validate:
         validate_queries(index.family, ys)
     br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
                             storage=index.storage)
-    return _knn_search_batch_approx_jit(index, ys, k, budget, p_guarantee,
-                                        br)
+    return _knn_search_batch_approx_jit(index, ys, k, budget,
+                                        jnp.float32(p_guarantee), br)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "budget", "block_rows"))
@@ -1120,6 +1134,7 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
 
 def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
               approx_p: float | None = None, *,
+              target_recall: float | None = None,
               max_doublings: int = MAX_BUDGET_DOUBLINGS,
               block_rows: int | None = None,
               stop_retry=None, return_stats: bool = False,
@@ -1152,8 +1167,18 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     ``return_stats=True`` returns ``(SearchResult, BatchStats)`` — the
     structured escalation counters services and benchmarks alert on
     (the log line is advisory only).
+
+    ``target_recall`` (mutually exclusive with ``approx_p``) selects the
+    approximate mode at a CALIBRATED shrink: the index's fitted recall
+    curve is inverted on the host (core/calibrate.py) and the resolved
+    ``p_guarantee`` drives the usual §8 pipeline.
     """
     index = _as_forest(index, k)
+    if target_recall is not None:
+        if approx_p is not None:
+            raise ValueError(
+                "pass at most one of approx_p / target_recall")
+        approx_p, _ = resolve_p_guarantee(index, target_recall)
     ys = jnp.asarray(ys, jnp.float32)
     if ys.ndim != 2:
         raise ValueError(f"knn_batch wants (q, d) queries, got {ys.shape}")

@@ -193,6 +193,16 @@ class SegmentedForest:
         return self.main.storage
 
     @property
+    def calibration(self):
+        """The recall-calibration curve (core/calibrate.py), if fitted.
+
+        Lives on the sealed main segment; inserts and tombstones leave it
+        in place (stale-but-measured, like the block envelopes staying
+        conservatively loose), :meth:`compact` refits it.
+        """
+        return self.main.calibration
+
+    @property
     def n(self) -> int:
         """Physical rows (tombstones included) — the searched array length."""
         return self.main.n + sum(s.n for s in self.segments)
@@ -351,7 +361,14 @@ class SegmentedForest:
         ``mode`` forces ``"merge"`` or ``"rebuild"``; ``None`` asks
         :meth:`decide`.  Either way original ids are preserved, so stored
         side tables (e.g. the kNN-LM token values) stay valid.
+
+        A fitted recall calibration is REFIT over the compacted index with
+        its stored fit parameters (both modes: a merge changes the layout
+        and drops rows, a rebuild re-clusters — either moves the measured
+        curve), so ``target_recall`` contracts stay anchored to what the
+        live index actually serves.
         """
+        prev_cal = self.main.calibration
         if self.live_n == 0:
             # Nothing to model or re-cluster: an empty merge just drops the
             # dead rows (a rebuild would hand build_index a 0-row array).
@@ -365,6 +382,19 @@ class SegmentedForest:
         else:
             self.main = self._merge()
         self.segments = []
+        if prev_cal is not None:
+            from . import calibrate as _calibrate
+            cal = None
+            if self.main.n and int(np.sum(
+                    np.asarray(self.main.point_ids) >= 0)) >= prev_cal.k:
+                cal = _calibrate.fit_calibration(
+                    self.main, k=prev_cal.k,
+                    num_queries=prev_cal.num_queries,
+                    p_grid=prev_cal.p_grid, seed=prev_cal.seed,
+                    jitter=prev_cal.jitter)
+            # Too few live rows to measure recall@k: drop the curve rather
+            # than serve a stale one over a different point set.
+            self.main = dataclasses.replace(self.main, calibration=cal)
         ids = np.asarray(self.main.point_ids)
         self.live = [ids >= 0]
         self.ids_host = [ids.copy()]

@@ -51,6 +51,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bounds
 from repro.core.bregman import get_family
+from repro.core.calibrate import resolve_p_guarantee
 from repro.core.index import (BallForest, REPLICATED_FIELDS, pad_points,
                               point_fields, refresh_envelopes)
 from repro.core.quantize import ub_slack
@@ -257,6 +258,7 @@ def _dist_knn_program(mesh: Mesh, axis: str, family_name: str,
 def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
                     budget: int, mesh: Mesh | None = None,
                     approx_p: float | None = None,
+                    target_recall: float | None = None,
                     block_rows: int | None = None,
                     max_doublings: int = MAX_BUDGET_DOUBLINGS,
                     launch_timeout_s: float | None = None,
@@ -286,9 +288,20 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     ``core.search.knn_batch``: True returns the budget-capped partial
     result (overflowed queries keep ``exact=False``) instead of retrying
     past a deadline.  ``clock`` is injectable for deterministic tests.
+
+    ``target_recall`` (mutually exclusive with ``approx_p``) runs the
+    approximate mode at a CALIBRATED shrink: the fitted recall curve
+    (carried on the sharded forest — it rides shard_index's
+    ``dataclasses.replace``) is inverted ON THE HOST before the launch,
+    so the SPMD program sees only the resolved ``p_guarantee`` scalar and
+    stays bit-identical to the single-host calibrated path.
     """
     mesh = mesh or sharded.mesh
     forest = sharded.forest
+    if target_recall is not None:
+        if approx_p is not None:
+            raise ValueError("pass at most one of approx_p / target_recall")
+        approx_p, _ = resolve_p_guarantee(forest, target_recall)
     if family != forest.family_name:
         raise ValueError(
             f"family {family!r} does not match index {forest.family_name!r}")

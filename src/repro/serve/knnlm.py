@@ -113,6 +113,7 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
                     family: str = "squared_euclidean",
                     m: int | None = None, quantize: bool = False,
                     block_rows: int | None = None,
+                    calibrate: bool = False, calibrate_k: int = 8,
                     seed: int = 0) -> Datastore:
     """Teacher-forced pass over (num_seqs, seq_len) tokens -> datastore.
 
@@ -124,6 +125,12 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
     same way (docs/quantization.md).  d_model-sized hidden states are
     exactly the "hundreds of dimensions, millions of keys" regime the
     memory win targets.
+
+    ``calibrate=True`` fits the recall-calibration curve over held-out
+    jittered keys at build time (core/calibrate.py), enabling
+    ``KNNLMHook(target_recall=...)`` — approximate decode-time retrieval
+    at a MEASURED recall level; ``calibrate_k`` should match the hook's
+    ``k`` (default 8 matches the hook default).
     """
     num, s = corpus_tokens.shape
     pos = np.arange(s, dtype=np.int32)[None, :].repeat(num, 0)
@@ -137,7 +144,9 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
     keys = np.asarray(hidden[:, :-1].reshape(-1, hidden.shape[-1]),
                       np.float32)
     vals = np.asarray(corpus_tokens[:, 1:].reshape(-1), np.int32)
-    index = build_index(keys, family, m=m, quantize=quantize, seed=seed)
+    index = build_index(keys, family, m=m, quantize=quantize,
+                        calibrate=calibrate, calibrate_k=calibrate_k,
+                        seed=seed)
     if block_rows is None:
         # Pin the autotuned streaming block size once at build time (same
         # policy as serve.retrieval.register_tenant): hook batches are
@@ -164,7 +173,13 @@ class KNNLMHook:
     k: int = 8
     lam: float = 0.25
     temperature: float = 1.0
-    approx_p: float | None = None   # paper §8 approximate mode
+    approx_p: float | None = None   # paper §8 approximate mode (raw knob)
+    # Calibrated alternative to approx_p: retrieve at a MEASURED recall
+    # level by inverting the datastore's calibration curve (fit it with
+    # build_datastore(calibrate=True)).  Mutually exclusive with approx_p;
+    # uncalibrated stores fall back to p = target_recall with a one-time
+    # warning (core/calibrate.py).
+    target_recall: float | None = None
     budget: int | None = None       # pinned refine budget (stable jit cache)
     block_rows: int | None = None   # streaming block size (None -> store's)
     # Optional robustness front end (serve/retrieval.py).  When set, every
@@ -205,11 +220,15 @@ class KNNLMHook:
         name = self.service_tenant
         if name not in svc.tenants or self._svc_version != self.store.version:
             # (Re-)register on every store mutation: the service revalidates
-            # the live rows and refreshes its tenant record.
-            svc.register_tenant(name, self.store.index)
+            # the live rows and refreshes its tenant record.  approx_p is
+            # the tenant's raw §8 knob; target_recall rides each request and
+            # inverts the store's calibration curve service-side — the two
+            # are different quantities and must not be conflated.
+            svc.register_tenant(name, self.store.index,
+                                p_guarantee=self.approx_p)
             self._svc_version = self.store.version
         resp = svc.search_sync(name, h, self.k, deadline_s=self.deadline_s,
-                               target_recall=self.approx_p)
+                               target_recall=self.target_recall)
         use = np.array([q in ("exact", "approx") for q in resp.row_quality])
         if not use.any():
             return None
@@ -246,7 +265,7 @@ class KNNLMHook:
             # Rare union overflows fall back to the capped sized retry.
             res, stats = bp_search.knn_batch(
                 self.store.index, h, self.k, budget=self.budget,
-                approx_p=self.approx_p,
+                approx_p=self.approx_p, target_recall=self.target_recall,
                 block_rows=(self.block_rows or self.store.block_rows),
                 return_stats=True)
             self.queries_served += int(h.shape[0])

@@ -75,6 +75,7 @@ from collections import deque
 import jax
 import numpy as np
 
+from repro.core import calibrate as breg_cal
 from repro.core import search as bp
 from repro.core.bregman import validate_rows
 from repro.core.segments import SegmentedForest
@@ -257,6 +258,12 @@ class RetrievalResponse:
     tenant_degraded: bool = False
     latency_s: float = 0.0
     deadline_met: bool = True
+    # Measured recall estimate for ``quality="approx"`` responses: the
+    # calibration curve's value at the shrink level that actually ran
+    # (core/calibrate.py).  None for exact responses (recall is 1.0 by
+    # construction) and for approx responses of uncalibrated tenants
+    # (nothing was measured — the honest answer is "unknown").
+    expected_recall: float | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
 
@@ -309,7 +316,9 @@ class RetrievalService:
     # -- tenants ------------------------------------------------------------
 
     def register_tenant(self, name: str, index, *, mesh=None, axis="data",
-                        p_guarantee: float | None = None) -> Tenant:
+                        p_guarantee: float | None = None,
+                        calibrate: bool = False,
+                        calibrate_k: int = 10) -> Tenant:
         """Admit an index into the registry, quarantining poisoned rows.
 
         With ``config.validate_index`` every live row is checked against
@@ -319,6 +328,13 @@ class RetrievalService:
         rebuild — and the tenant is marked ``degraded`` with the
         quarantined ids kept for audit.  Searches then run exact over the
         clean live set; every response advertises ``tenant_degraded``.
+
+        ``calibrate=True`` fits a recall-calibration curve at registration
+        when the index does not already carry one (the preferred place is
+        ``build_index(calibrate=True)`` — this is the catch-up path for
+        indexes built before calibration existed).  The fit runs AFTER
+        quarantine (measured over the clean live set) and BEFORE sharding
+        (the sharded snapshot carries the curve).
 
         ``mesh`` shards the (validated) index point-major for
         ``distributed_knn`` launches; the sharded snapshot is FROZEN at
@@ -335,6 +351,8 @@ class RetrievalService:
                     index = SegmentedForest.from_forest(index)
             if isinstance(index, SegmentedForest):
                 quarantined = index.quarantine()
+        if calibrate:
+            index = breg_cal.ensure_calibration(index, k=calibrate_k)
         sharded = None
         if mesh is not None:
             sharded = dist_knn.shard_index(index, mesh, axis)
@@ -448,7 +466,11 @@ class RetrievalService:
         self.queue = still
 
         # Microbatch: FIFO within (tenant, k, target_recall) groups, up to
-        # max_batch query rows per launch group.
+        # max_batch query rows per launch group.  The TENANT component is
+        # load-bearing for correctness, not just isolation: target_recall
+        # resolves to a per-tenant shrink factor through each index's own
+        # calibration curve, so two tenants sharing a target must never
+        # share a launch (tests/test_calibration.py pins this down).
         groups: dict[tuple, list[_Request]] = {}
         order: list[tuple] = []
         for req in self.queue:
@@ -573,10 +595,27 @@ class RetrievalService:
         # perturb this microbatch's results.
         snapshot = bp._as_forest(tenant.index)
         k = reqs[0].k
-        p = (tenant.p_guarantee if target_recall is None
-             else float(target_recall))
+        # Resolve the §8 shrink level from THIS tenant's snapshot: a
+        # client target_recall inverts the index's measured calibration
+        # curve (core/calibrate.py; uncalibrated indexes fall back to
+        # p = target, the historical behavior, with a one-time warning) —
+        # target_recall and p_guarantee are different quantities and are
+        # never conflated on a calibrated index.  Two tenants sharing a
+        # target_recall may resolve to different p: the microbatch key in
+        # step() is tenant-scoped, so each batch reaches here with one
+        # tenant and one resolved shrink.
+        cal = getattr(snapshot, "calibration", None)
+        if target_recall is None:
+            p = tenant.p_guarantee
+            expected = None if cal is None else cal.expected_recall(p)
+        else:
+            p, expected = breg_cal.resolve_p_guarantee(snapshot,
+                                                       target_recall)
 
-        meta: dict = {"bucket": bucket, "attempts": 0, "tier_path": []}
+        meta: dict = {"bucket": bucket, "attempts": 0, "tier_path": [],
+                      "p_guarantee": p}
+        if expected is not None:
+            meta["expected_recall"] = expected
         if cfg.record_snapshots:
             meta["snapshot"] = snapshot
         res, used_approx, error = None, False, None
@@ -644,7 +683,9 @@ class RetrievalService:
             q = r.queries.shape[0]
             sl = slice(row, row + q)
             self._resolve(r, ids[sl].copy(), dists[sl].copy(), exact[sl],
-                          ok[sl], used_approx, finished, dict(meta))
+                          ok[sl], used_approx, finished, dict(meta),
+                          expected_recall=(expected if used_approx
+                                           else None))
             row += q
         return len(reqs)
 
@@ -779,7 +820,8 @@ class RetrievalService:
     # -- response assembly --------------------------------------------------
 
     def _resolve(self, req: _Request, ids, dists, exact, ok, used_approx,
-                 finished: float, meta: dict) -> None:
+                 finished: float, meta: dict,
+                 expected_recall: float | None = None) -> None:
         tenant = self.tenants[req.tenant]
         row_quality = []
         for i in range(ids.shape[0]):
@@ -803,7 +845,8 @@ class RetrievalService:
             dists=dists, row_quality=row_quality, flagged_rows=flagged,
             tenant_degraded=tenant.degraded,
             latency_s=finished - req.submitted_at,
-            deadline_met=finished <= req.deadline, meta=meta)
+            deadline_met=finished <= req.deadline,
+            expected_recall=expected_recall, meta=meta)
         req.ticket.done = True
 
     def _resolve_shed(self, ticket: Ticket, uid: int, tenant: str, q: int,

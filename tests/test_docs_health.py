@@ -1,0 +1,57 @@
+"""The docs front door stays healthy: links resolve, every page mapped.
+
+Runs tools/docs_health.py both in-process (against this repo — the
+actual gate) and against synthetic trees that pin the two failure modes
+it exists to catch (broken link, unreached page).
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import docs_health  # noqa: E402
+
+
+def test_this_repo_is_healthy():
+    assert docs_health.check(REPO) == []
+
+
+def test_cli_exit_status():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "docs_health.py"), str(REPO)],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "docs health OK" in proc.stdout
+
+
+def _tree(tmp_path, front_door: str, pages: dict):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "README.md").write_text("[docs](docs/README.md)\n")
+    (tmp_path / "docs" / "README.md").write_text(front_door)
+    for name, text in pages.items():
+        (tmp_path / "docs" / name).write_text(text)
+    return tmp_path
+
+
+def test_broken_link_detected(tmp_path):
+    root = _tree(tmp_path, "[gone](missing.md)\n", {})
+    errors = docs_health.check(root)
+    assert any("broken link" in e and "missing.md" in e for e in errors)
+
+
+def test_unreachable_page_detected(tmp_path):
+    root = _tree(tmp_path, "no links here\n", {"orphan.md": "# lonely\n"})
+    errors = docs_health.check(root)
+    assert any("orphan.md" in e and "not reachable" in e for e in errors)
+
+
+def test_transitive_reachability_and_fragments_ok(tmp_path):
+    root = _tree(
+        tmp_path,
+        "[a](a.md)\n",
+        {"a.md": "[b](b.md#some-section)\n```\n[not a link](nope.md)\n```\n",
+         "b.md": "[up](../README.md)\n"})
+    assert docs_health.check(root) == []

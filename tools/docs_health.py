@@ -1,0 +1,97 @@
+"""Docs health check: links resolve, and the map reaches every page.
+
+    python tools/docs_health.py [repo_root]
+
+Two invariants, enforced in CI (the ``docs`` job) and by
+``tests/test_docs_health.py``:
+
+1. Every intra-repo markdown link in ``README.md`` and ``docs/*.md``
+   resolves to an existing file (fragments are stripped; external
+   ``http(s)``/``mailto`` targets and pure-anchor links are skipped).
+2. Every ``docs/*.md`` page is reachable from ``docs/README.md`` by
+   following markdown links — the front door must actually front every
+   door, so a new page that nobody linked fails the build instead of
+   silently rotting.
+
+Exit status 0 iff both hold; violations are printed one per line.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links only ([text](target)); reference-style links are not used
+# in this tree.  Images ride the same syntax with a leading ! and are
+# checked identically.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def _links(path: Path) -> list[str]:
+    text = _FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    out = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        out.append(target.split("#", 1)[0])
+    return [t for t in out if t]
+
+
+def check(root: Path) -> list[str]:
+    """All violations under ``root`` (empty list == healthy)."""
+    docs_dir = root / "docs"
+    front_door = docs_dir / "README.md"
+    scanned = sorted(docs_dir.glob("*.md")) + [root / "README.md"]
+    errors = []
+    for page in (front_door, root / "README.md"):
+        if not page.is_file():
+            errors.append(f"missing front door: {page.relative_to(root)}")
+    if errors:
+        return errors
+
+    # 1. Every link on every scanned page resolves.
+    resolved: dict[Path, list[Path]] = {}
+    for page in scanned:
+        resolved[page] = []
+        for target in _links(page):
+            dest = (page.parent / target).resolve()
+            if not dest.exists():
+                errors.append(
+                    f"{page.relative_to(root)}: broken link -> {target}")
+            elif dest.is_file():
+                resolved[page].append(dest)
+
+    # 2. BFS from docs/README.md: every docs page must be reachable.
+    seen = {front_door.resolve()}
+    frontier = [front_door.resolve()]
+    while frontier:
+        here = frontier.pop()
+        for dest in resolved.get(here, []):
+            if dest.suffix == ".md" and dest not in seen:
+                seen.add(dest)
+                if dest in resolved:      # only scanned pages have links
+                    frontier.append(dest)
+    for page in docs_dir.glob("*.md"):
+        if page.resolve() not in seen:
+            errors.append(f"docs/{page.name}: not reachable from "
+                          "docs/README.md — add it to the map")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path.cwd()
+    errors = check(root)
+    for e in errors:
+        print(e)
+    pages = len(list((root / "docs").glob("*.md")))
+    if not errors:
+        print(f"docs health OK: {pages} docs pages, all linked, "
+              "all reachable")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
