@@ -20,8 +20,8 @@ def run(scale: float = 0.05) -> list[Row]:
         exact = search.knn_batch(idx, queries, k)
         for p in (0.7, 0.8, 0.9):
             res = search.knn_batch(idx, queries, k, approx_p=p)
-            us = timeit(lambda: search.knn_batch(idx, queries, k,
-                                                 approx_p=p), repeats=3)
+            us = timeit(lambda p=p: search.knn_batch(idx, queries, k,
+                                                     approx_p=p), repeats=3)
             ors, recs = [], []
             for i in range(len(queries)):
                 ors.append(overall_ratio(res.dists[i], exact.dists[i]))

@@ -196,7 +196,7 @@ def _verify_and_summarize(svc, plan, submitted, deadline_s, k):
     max_launch = max((t.cost.max_s if isinstance(t.cost, _TrackingCost)
                       else 0.0) for t in svc.tenants.values())
 
-    for uid, (q, tenant, ticket) in submitted.items():
+    for uid, (q, _tenant, ticket) in submitted.items():
         if not ticket.done:                    # zero crashes / lost tickets
             violations.append(f"uid {uid}: never resolved")
             continue

@@ -17,14 +17,15 @@ def run(scale: float = 0.02) -> list[Row]:
         bbt = BBTree(data, spec.measure)
         vaf = VAFile(data, spec.measure)
         for k in (20, 100):
-            us_bp = timeit(lambda: search.knn_batch(idx, queries, k),
+            us_bp = timeit(lambda k=k: search.knn_batch(idx, queries, k),
                            repeats=3) / len(queries)
-            us_bbt = timeit(lambda: [bbt.knn(q, k) for q in queries],
+            us_bbt = timeit(lambda k=k: [bbt.knn(q, k) for q in queries],
                             repeats=1) / len(queries)
-            us_vaf = timeit(lambda: [vaf.knn(q, k) for q in queries],
+            us_vaf = timeit(lambda k=k: [vaf.knn(q, k) for q in queries],
                             repeats=1) / len(queries)
-            us_lin = timeit(lambda: [linear_scan(data, q, k, spec.measure)
-                                     for q in queries], repeats=1) / len(queries)
+            us_lin = timeit(
+                lambda k=k: [linear_scan(data, q, k, spec.measure)
+                             for q in queries], repeats=1) / len(queries)
             rows += [
                 Row("fig12_time", f"BP/{name}/k={k}", us_bp, {}),
                 Row("fig12_time", f"BBT/{name}/k={k}", us_bbt, {}),

@@ -178,7 +178,7 @@ class BBTree:
                 stats["distance_evals"] += len(node.points)
                 stats["candidates"] += len(node.points)
                 stats["bytes_moved"] += len(node.points) * self.data.shape[1] * F32
-                for di, pid in zip(d, node.points):
+                for di, pid in zip(d, node.points, strict=True):
                     if len(best) < k:
                         heapq.heappush(best, (-di, pid))
                     elif di < -best[0][0]:

@@ -107,7 +107,7 @@ class RecallCalibration:
 def _recall_at_k(ids: np.ndarray, true_ids: np.ndarray) -> float:
     """Mean fraction of oracle ids recovered, set-wise per query row."""
     hits = 0
-    for row, truth in zip(ids, true_ids):
+    for row, truth in zip(ids, true_ids, strict=True):
         hits += len(set(row.tolist()) & set(truth.tolist()))
     return hits / true_ids.size
 
@@ -171,6 +171,22 @@ def fit_calibration(index, *, k: int = 10,
     return RecallCalibration(p_grid=grid, recall_grid=rec, k=k,
                              num_queries=num_queries, seed=seed,
                              jitter=float(jitter))
+
+
+def validate_target_recall(target_recall) -> None:
+    """Range-gate a raw ``target_recall`` knob (None = knob unused).
+
+    The resolver pair (:func:`resolve_p_guarantee` / the calibration's
+    ``resolve``) re-checks the range where it inverts the curve; this
+    standalone gate is for entry points that accept the knob but hand it
+    off later (serve/retrieval.py stores it per-request), so a malformed
+    value fails at submission instead of deep inside the batch ladder.
+    """
+    if target_recall is None:
+        return
+    t = float(target_recall)
+    if not 0.0 <= t <= 1.0:    # False for NaN too
+        raise ValueError(f"target_recall must be in [0, 1], got {t}")
 
 
 def resolve_p_guarantee(index, target_recall: float):

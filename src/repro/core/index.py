@@ -102,6 +102,12 @@ class BallForest:
     # round-trip, which only traced internals perform.
     calibration: object | None = None
 
+    # Fields deliberately excluded from BOTH flatten sides: host-only
+    # payload that does not survive a jax.tree.map round-trip (the
+    # brelint pytree-contract pass requires every dataclass field to be
+    # dynamic, static aux, or listed here — docs/static_analysis.md).
+    HOST_ONLY_FIELDS = ("calibration",)
+
     @property
     def family(self) -> BregmanFamily:
         return get_family(self.family_name)

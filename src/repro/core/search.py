@@ -80,6 +80,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .bregman import get_family, validate_rows
 from .calibrate import resolve_p_guarantee
@@ -369,6 +370,7 @@ def knn_search(index, y: Array, k: int, budget: int,
                validate: bool = True) -> SearchResult:
     """Exact kNN for one query (static budget; accepts a mutable index)."""
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
     if validate:
         validate_queries(index.family, y)
     return _knn_search_jit(index, y, k, budget)
@@ -417,6 +419,8 @@ def knn_search_approx(index, y: Array, k: int, budget: int,
                       validate: bool = True) -> SearchResult:
     """§8 approximate kNN for one query (accepts a mutable index)."""
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
+    validate_p_guarantee(p_guarantee)
     if validate:
         validate_queries(index.family, y)
     return _knn_search_approx_jit(index, y, k, budget, p_guarantee)
@@ -948,6 +952,7 @@ def knn_search_batch(index, ys: Array, k: int, budget: int,
                      env_block_rows: int | None = None) -> SearchResult:
     """Exact kNN for a (q, d) query block — one jitted program, (q, ...) fields."""
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
     if validate:
         validate_queries(index.family, ys)
     br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
@@ -979,11 +984,13 @@ def knn_search_batch_approx(
     to ``p_guarantee = target_recall`` with a one-time warning.
     """
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
     if (p_guarantee is None) == (target_recall is None):
         raise ValueError(
             "pass exactly one of p_guarantee / target_recall")
     if target_recall is not None:
         p_guarantee, _ = resolve_p_guarantee(index, target_recall)
+    validate_p_guarantee(p_guarantee)
     if validate:
         validate_queries(index.family, ys)
     br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
@@ -1021,6 +1028,7 @@ def knn_search_batch_stats(index, ys: Array, k: int, budget: int,
     hot path.
     """
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
     br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
                             storage=index.storage)
     res, env_admitted, blocks_run, tau = _knn_search_batch_stats_jit(
@@ -1070,6 +1078,8 @@ def knn_search_batch_reference(index, ys: Array, k: int, budget: int,
     bit-for-bit on every output field.
     """
     index = _as_forest(index, k)
+    budget = resolve_budget(budget, index.n, k)
+    validate_p_guarantee(p_guarantee)
     br = resolve_block_rows(block_rows, index.n)
     if p_guarantee is None:
         return _knn_search_batch_ref_jit(index, ys, k, budget, br)
@@ -1084,10 +1094,57 @@ def knn_search_batch_reference(index, ys: Array, k: int, budget: int,
 MAX_BUDGET_DOUBLINGS = 8
 
 
+def resolve_budget(budget, n: int, k: int) -> int:
+    """THE refine-budget resolver: every public entry point routes its
+    ``budget`` knob through here before first use (brelint knob-contract,
+    docs/static_analysis.md).
+
+    ``None`` picks the cost model's candidate estimate; an explicit
+    budget must be an integer >= k (fewer slots can never hold the k
+    results — the same contract the jit core enforces) and is clamped to
+    ``n``: a pinned budget can outlive a compaction that shrank the index
+    (serve/knnlm.py), and ``top_k(priority, budget)`` needs budget <= n.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"resolve_budget: empty index (n={n})")
+    if k > n:
+        # Diagnose the real error before the budget math trips over it
+        # (same message as the jit core's trace-time guard).
+        raise ValueError(f"k={k} exceeds index size n={n}")
+    if budget is None:
+        return int(min(n, max(4 * k, 64, n // 16)))
+    if isinstance(budget, bool) or budget != int(budget):
+        raise TypeError(f"budget must be an int or None, got {budget!r}")
+    budget = int(budget)
+    if budget < k:
+        raise ValueError(f"budget={budget} must be >= k={k} (the refine "
+                         "top-k needs at least k slots)")
+    return min(budget, n)
+
+
+def validate_p_guarantee(p) -> None:
+    """Range-gate a raw §8 shrink probability (``p_guarantee`` /
+    ``approx_p``) before it enters a jitted program.
+
+    Only host scalars are checked — traced/jax values pass through
+    untouched (there is no host value to compare, and coercing one would
+    be exactly the host-op-under-trace defect brelint exists to catch);
+    the calibration sweep and the jit cores feed those paths.
+    """
+    if p is None:
+        return
+    if isinstance(p, bool) or not isinstance(
+            p, (int, float, np.floating, np.integer)):
+        return
+    v = float(p)
+    if not 0.0 <= v <= 1.0:    # False for NaN too
+        raise ValueError(f"p_guarantee must be within [0, 1], got {v}")
+
+
 def default_budget(index: BallForest, k: int) -> int:
     """Initial refine budget ~ the cost model's candidate estimate."""
-    n = index.n
-    return int(min(n, max(4 * k, 64, n // 16)))
+    return resolve_budget(None, index.n, k)
 
 
 def fitted_budget_for_n(n: int, k: int, needed: int) -> int:
@@ -1117,10 +1174,8 @@ def knn(index: BallForest, y, k: int, budget: int | None = None,
     index = _as_forest(index, k)
     y = jnp.asarray(y, jnp.float32)
     validate_queries(index.family, y)
-    # Clamp explicit budgets: a pinned budget can outlive a compaction that
-    # shrank the index (serve/knnlm.py), and top_k(priority, budget) needs
-    # budget <= n.
-    budget = min(budget, index.n) if budget else default_budget(index, k)
+    validate_p_guarantee(approx_p)
+    budget = resolve_budget(budget, index.n, k)
     while True:
         if approx_p is None:
             res = knn_search(index, y, k, budget, validate=False)
@@ -1179,13 +1234,13 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
             raise ValueError(
                 "pass at most one of approx_p / target_recall")
         approx_p, _ = resolve_p_guarantee(index, target_recall)
+    validate_p_guarantee(approx_p)
     ys = jnp.asarray(ys, jnp.float32)
     if ys.ndim != 2:
         raise ValueError(f"knn_batch wants (q, d) queries, got {ys.shape}")
     if validate:
         validate_queries(index.family, ys)
-    # Same clamp as knn: pinned budgets survive compactions that shrink n.
-    budget = min(budget, index.n) if budget else default_budget(index, k)
+    budget = resolve_budget(budget, index.n, k)
     p = None if approx_p is None else jnp.float32(approx_p)
 
     def run(b):

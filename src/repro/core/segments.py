@@ -239,7 +239,7 @@ class SegmentedForest:
     def live_ids(self) -> np.ndarray:
         """Original ids of the live points, in layout order."""
         return np.concatenate(
-            [ids[mask] for ids, mask in zip(self.ids_host, self.live)])
+            [ids[mask] for ids, mask in zip(self.ids_host, self.live, strict=True)])
 
     # -- mutations ----------------------------------------------------------
 
@@ -315,7 +315,7 @@ class SegmentedForest:
         """
         blocks = [self.main] + self.segments
         bad: list[np.ndarray] = []
-        for b, mask in zip(blocks, self.live):
+        for b, mask in zip(blocks, self.live, strict=True):
             if not mask.any():
                 continue
             rows = np.asarray(b.rows_view())
@@ -413,7 +413,7 @@ class SegmentedForest:
         for f in fields:
             out.append(np.concatenate([
                 np.asarray(getattr(b, f))[mask]
-                for b, mask in zip(blocks, self.live)]))
+                for b, mask in zip(blocks, self.live, strict=True)]))
         return tuple(out)
 
     def _live_rows(self) -> np.ndarray:
@@ -421,7 +421,7 @@ class SegmentedForest:
         blocks = [self.main] + self.segments
         return np.concatenate([
             np.asarray(b.rows_view())[mask]
-            for b, mask in zip(blocks, self.live)])
+            for b, mask in zip(blocks, self.live, strict=True)])
 
     def _rebuild(self, seed: int) -> BallForest:
         """Full Alg.-5 rebuild over the live points, original ids kept.
@@ -457,7 +457,7 @@ class SegmentedForest:
         Theorem-3 test admissible across compactions.
         """
         fields = point_fields(self.main)
-        arrays = dict(zip(fields, self._live_arrays(fields)))
+        arrays = dict(zip(fields, self._live_arrays(fields), strict=True))
         order = np.argsort(arrays["assign"][:, 0], kind="stable")
         arrays = {f: jnp.asarray(a[order]) for f, a in arrays.items()}
 

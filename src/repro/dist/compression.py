@@ -66,7 +66,7 @@ def compressed_grad_allreduce(grads: Any, axis: str,
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = treedef.flatten_up_to(ef.residual)
     means, residuals = [], []
-    for g, r in zip(flat_g, flat_r):
+    for g, r in zip(flat_g, flat_r, strict=True):
         m, nr = compressed_psum_mean(g, axis, r)
         means.append(m)
         residuals.append(nr)

@@ -59,7 +59,8 @@ from repro.core.search import (MAX_BUDGET_DOUBLINGS,
                                SearchResult, _batch_filter_topk,
                                _cdf_shrink, _refine_batch,
                                _stream_prune_compact, _tuple_rows,
-                               fitted_budget_for_n, resolve_block_rows)
+                               fitted_budget_for_n, resolve_block_rows,
+                               resolve_budget, validate_p_guarantee)
 from repro.core.transform import Partition, q_transform_views
 from . import sharding as shd
 
@@ -302,6 +303,7 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
         if approx_p is not None:
             raise ValueError("pass at most one of approx_p / target_recall")
         approx_p, _ = resolve_p_guarantee(forest, target_recall)
+    validate_p_guarantee(approx_p)
     if family != forest.family_name:
         raise ValueError(
             f"family {family!r} does not match index {forest.family_name!r}")
@@ -314,7 +316,9 @@ def distributed_knn(sharded: ShardedForest, queries, *, family: str, k: int,
     block_rows = resolve_block_rows(block_rows, sharded.global_live_n,
                                     q=qv.y.shape[0],
                                     storage=forest.storage)
-    b = max(min(int(budget), local_n), k)
+    # Per-shard budget: the global knob resolved against the LOCAL row
+    # count (each shard refines its own candidate slots).
+    b = resolve_budget(budget, local_n, k)
     arrs = {f: getattr(forest, f)
             for f in point_fields(forest) + REPLICATED_FIELDS}
     extra = () if approx_p is None else (jnp.float32(approx_p),)

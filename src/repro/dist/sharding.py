@@ -89,7 +89,7 @@ def spec_for_shape(names: Sequence[str | None], shape: Sequence[int],
     rules = DEFAULT_RULES if rules is None else rules
     if len(names) != len(shape):
         raise ValueError(f"axes {names} do not match shape {tuple(shape)}")
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
     rank = {name: i for i, name in enumerate(rules)}
     order = sorted(
         (i for i, nm in enumerate(names) if nm is not None and nm in rules),

@@ -162,8 +162,9 @@ def serve_weight_bytes_per_device(bundle: ModelBundle, mesh: Mesh,
     shardings = shd.tree_shardings_for_structs(
         bundle.param_axes(), bundle.param_structs(), mesh, rules)
     total = 0
-    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for s, sh in zip(jax.tree.leaves(structs), jax.tree.leaves(shardings)):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
+    for s, sh in zip(jax.tree.leaves(structs),
+                     jax.tree.leaves(shardings), strict=True):
         if s.dtype != jnp.bfloat16:
             continue
         n = 1

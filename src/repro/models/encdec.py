@@ -138,9 +138,9 @@ def encode(cfg: EncDecConfig, params: dict, frames: Array) -> Array:
                                    apply_norm(lp["norm1"], x, cfg.norm),
                                    dummy_pos, causal=False)
             x = x + h
-            x = x + apply_mlp(lp["mlp"],
-                              apply_norm(lp["norm2"], x, cfg.norm), cfg.act)
-            return x
+            return x + apply_mlp(lp["mlp"],
+                                 apply_norm(lp["norm2"], x, cfg.norm),
+                                 cfg.act)
         x = jax.checkpoint(block)(lp, x) if cfg.remat else block(lp, x)
         x = constrain(x, ("batch", "seq", "embed"))
     return apply_norm(params["enc_final_norm"], x, cfg.norm)
@@ -209,7 +209,7 @@ def prefill(cfg: EncDecConfig, params: dict, tokens: Array, positions: Array,
     x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)
     x = constrain(x, ("batch", "seq", "embed"))
     new_caches = []
-    for lp, cache in zip(params["decoder"], caches):
+    for lp, cache in zip(params["decoder"], caches, strict=True):
         q, k, v = attn_mod.qkv_project(lp["self_attn"],
                                        apply_norm(lp["norm1"], x, cfg.norm),
                                        positions=positions, rope_theta=1e4,
@@ -229,7 +229,7 @@ def decode_step(cfg: EncDecConfig, params: dict, token: Array,
     pos = positions if positions.ndim == 2 else positions[..., 0]
     x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(dt)
     new_caches = []
-    for lp, cache in zip(params["decoder"], caches):
+    for lp, cache in zip(params["decoder"], caches, strict=True):
         x, new_self, new_cross = _decoder_layer(
             cfg, lp, x, positions, None, cache["self"], cache["cross"],
             lengths)

@@ -64,7 +64,7 @@ def init_tree(key: Array, specs) -> Any:
     """Materialize a Spec pytree (deterministic per-leaf key folding)."""
     leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
     keys = jax.random.split(key, len(leaves))
-    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    vals = [s.materialize(k) for s, k in zip(leaves, keys, strict=True)]
     return jax.tree.unflatten(treedef, vals)
 
 

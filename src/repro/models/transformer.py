@@ -308,7 +308,7 @@ def forward_train(cfg: LMConfig, params: dict, tokens: Array,
         (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
     else:
         aux = 0.0
-        for kind, lp in zip(kinds, params["layers"]):
+        for kind, lp in zip(kinds, params["layers"], strict=True):
             fn = _remat(cfg, functools.partial(_apply_layer, cfg, kind))
             x, a, _ = fn(lp, x, positions=positions, cache=None, lengths=None)
             x = constrain(x, ("batch", "seq", "embed"))

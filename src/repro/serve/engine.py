@@ -132,7 +132,7 @@ class Engine:
         b, pl = self.cfg.slots, self.cfg.prefill_len
         tokens = np.zeros((b, pl), np.int32)
         admitted = np.zeros((b,), bool)
-        for s, r in zip(slots, reqs):
+        for s, r in zip(slots, reqs, strict=True):
             tokens[s, : len(r.prompt)] = r.prompt      # right-pad
             admitted[s] = True
             self.slot_req[s] = r
@@ -158,7 +158,7 @@ class Engine:
                              jnp.asarray(last_idx)]
         logits = self.bundle.logits(self.params, last_hidden)
         first = self._sample(logits, last_hidden)
-        for j, (s, r) in enumerate(zip(slots, reqs)):
+        for j, (s, r) in enumerate(zip(slots, reqs, strict=True)):
             r.output.append(int(first[j]))
             self.lengths[s] = len(r.prompt)
             # The prefill-sampled token counts against the budget and is

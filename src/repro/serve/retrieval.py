@@ -93,6 +93,23 @@ _QORDER = {QUALITY_EXACT: 0, QUALITY_APPROX: 1, QUALITY_PARTIAL: 2,
 _LADDER = (QUALITY_EXACT, QUALITY_APPROX, QUALITY_PARTIAL)
 
 
+def resolve_deadline_s(deadline_s, default_s: float) -> float:
+    """THE per-request deadline resolver (brelint knob-contract).
+
+    ``None`` picks the service default; an explicit deadline must be a
+    finite positive number of seconds — zero/negative/NaN deadlines would
+    make every request deadline-shed before its first launch, a config
+    error worth rejecting at submission.
+    """
+    if deadline_s is None:
+        return float(default_s)
+    d = float(deadline_s)
+    if not math.isfinite(d) or d <= 0.0:
+        raise ValueError(
+            f"deadline_s must be a finite positive number, got {deadline_s!r}")
+    return d
+
+
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     """Tuning knobs — see docs/serving_robustness.md for guidance."""
@@ -340,6 +357,7 @@ class RetrievalService:
         ``distributed_knn`` launches; the sharded snapshot is FROZEN at
         registration — re-register after mutating to reshard.
         """
+        bp.validate_p_guarantee(p_guarantee)
         fam = index.family
         quarantined = np.empty((0,), np.int32)
         if self.config.validate_index:
@@ -387,12 +405,14 @@ class RetrievalService:
         Backpressure and validation failures resolve the ticket
         IMMEDIATELY (``quality == "shed"`` with ``shed_reason`` /
         ``retry_after``) rather than raising — rejection is part of the
-        response contract, not an exception.  Unknown tenants are the one
-        programming error that raises.
+        response contract, not an exception.  Unknown tenants and
+        malformed knobs (``target_recall`` outside [0, 1], non-positive
+        ``deadline_s``) are the programming errors that raise.
         """
         if tenant not in self.tenants:
             raise KeyError(f"unknown tenant {tenant!r}; "
                            f"registered: {sorted(self.tenants)}")
+        breg_cal.validate_target_recall(target_recall)
         t = self.tenants[tenant]
         now = self.clock.now()
         qs = np.array(queries, np.float32, copy=True)
@@ -433,8 +453,8 @@ class RetrievalService:
                 reason="queue_full", retry_after=est * batches)
             return ticket
 
-        deadline = now + (self.config.default_deadline_s
-                          if deadline_s is None else float(deadline_s))
+        deadline = now + resolve_deadline_s(
+            deadline_s, self.config.default_deadline_s)
         self.queue.append(_Request(
             uid=uid, tenant=tenant, queries=qs, k=int(k), deadline=deadline,
             target_recall=target_recall, submitted_at=now, ok_rows=ok,

@@ -146,7 +146,7 @@ def restore_checkpoint(directory: str, step: int, target, *,
     named_sh = (_flatten_with_names(shardings)
                 if shardings is not None else {})
     out = {}
-    for name, tgt in named_target.items():
+    for name, _tgt in named_target.items():
         meta = manifest["leaves"][name]
         pieces = loaded[name]
         arr = (np.concatenate(pieces, axis=0)

@@ -50,10 +50,10 @@ class StragglerEvent:
 
 
 class StragglerMonitor:
-    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+    def __init__(self, cfg: StragglerConfig | None = None,
                  num_hosts: int = 1,
                  mitigation: Callable[[StragglerEvent], None] | None = None):
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else StragglerConfig()
         self.num_hosts = num_hosts
         self.mitigation = mitigation
         self.times: list[deque] = [deque(maxlen=cfg.window)

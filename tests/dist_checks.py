@@ -56,7 +56,7 @@ def check_distributed_knn():
             want_ids = set(np.asarray(ref.ids).tolist())
             # allow distance ties to swap ids; distances already matched
             assert len(got_ids & want_ids) >= k - 1, (got_ids, want_ids)
-        print(f"  knn ok on mesh {dict(zip(axes, mesh_shape))} "
+        print(f"  knn ok on mesh {dict(zip(axes, mesh_shape, strict=True))} "
               f"(candidates={np.asarray(ncand).tolist()})")
 
 
@@ -110,7 +110,7 @@ def check_compression():
     # error feedback: the *accumulated* applied update converges to the true
     # mean direction — residual stays bounded, applied sum tracks t * mean.
     applied = jnp.zeros_like(true_mean)
-    for t in range(1, 6):
+    for _t in range(1, 6):
         mean_est, res = fn(g, res)
         applied = applied + mean_est[:1]
     drift = float(jnp.max(jnp.abs(applied / 5 - true_mean)))
@@ -147,7 +147,7 @@ def check_pipeline():
     got = pipeline_apply(stage_fn, mesh, "stage", ws, xs)
     want = xs
     for s in range(p):
-        want = jax.vmap(lambda x: stage_fn(ws[s], x))(want)
+        want = jax.vmap(lambda x, s=s: stage_fn(ws[s], x))(want)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
     print("  pipeline ok")

@@ -88,7 +88,8 @@ def test_train_step_reduces_loss(bundle, params):
     # enough steps along -g; loop bounds the search)
     gn = float(jnp.sqrt(gnorm))
     for lr in (1e-1, 1e-2, 1e-3, 1e-4):
-        p1 = jax.tree.map(lambda p, gg: p - (lr / gn) * gg, params, g)
+        p1 = jax.tree.map(lambda p, gg, lr=lr: p - (lr / gn) * gg,
+                          params, g)
         l1, _ = vg(p1)
         assert np.isfinite(float(l1))
         if float(l1) < float(l0):

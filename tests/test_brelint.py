@@ -1,0 +1,296 @@
+"""brelint stays green on this repo, and each pass catches its defect.
+
+Runs tools/analyze both in-process (against this repo — the actual gate)
+and against synthetic src/ trees that seed one violation per pass,
+including a regression fixture reproducing the PR 6 outage class: a
+host-side validator (np.asarray + raise) reachable from a jit+vmap
+region without the ``validate=False`` opt-out.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools import analyze  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# The actual gate: this repo is healthy
+# ---------------------------------------------------------------------------
+
+def test_this_repo_is_healthy():
+    assert analyze.check(REPO) == []
+
+
+def test_cli_exit_status():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.analyze", str(REPO)],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "brelint OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Synthetic trees
+# ---------------------------------------------------------------------------
+
+def _tree(tmp_path, files: dict) -> Path:
+    """Materialize a fixture repo: {relpath: source} under tmp_path."""
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text), encoding="utf-8")
+    return tmp_path
+
+
+def _findings(root, invariant=None):
+    found = analyze.analyze(Path(root))
+    if invariant is None:
+        return found
+    return [f for f in found if f.invariant == invariant]
+
+
+# -- trace-safety -----------------------------------------------------------
+
+# The PR 6 defect, minimized: a host validator (np.asarray + raise on the
+# query payload) sits behind `validate=True` defaults, and a jitted+vmapped
+# lambda calls the search wrapper WITHOUT discharging the guard.
+_PR6_SEARCH = """\
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def validate_queries(family, q):
+        arr = np.asarray(q)
+        if not np.all(np.isfinite(arr)):
+            raise ValueError("query outside family domain")
+
+    def knn_search(index, y, k, validate=True):
+        if validate:
+            validate_queries(None, y)
+        return jnp.sum(y) + k
+"""
+
+_PR6_BAD_BENCH = _PR6_SEARCH + """\
+
+    run = jax.jit(jax.vmap(lambda y: knn_search(None, y, 5)))
+"""
+
+_PR6_GOOD_BENCH = _PR6_SEARCH + """\
+
+    run = jax.jit(jax.vmap(lambda y: knn_search(None, y, 5, validate=False)))
+"""
+
+
+def test_trace_safety_catches_pr6_host_validate_under_jit(tmp_path):
+    root = _tree(tmp_path, {"src/repro/search.py": _PR6_BAD_BENCH})
+    hits = _findings(root, "trace-host-op")
+    assert any("validate_queries" in f.symbol or "asarray" in f.message
+               for f in hits), [f.render(root) for f in _findings(root)]
+
+
+def test_trace_safety_validate_false_discharges_the_guard(tmp_path):
+    root = _tree(tmp_path, {"src/repro/search.py": _PR6_GOOD_BENCH})
+    assert _findings(root, "trace-host-op") == []
+
+
+def test_trace_safety_flags_item_and_branch_on_traced(tmp_path):
+    root = _tree(tmp_path, {"src/repro/mod.py": """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if jnp.sum(x) > 0:
+                return float(x.sum())
+            return x.mean().item()
+    """})
+    assert _findings(root, "trace-host-op")
+    assert _findings(root, "trace-branch-on-array")
+
+
+# -- pytree-contract --------------------------------------------------------
+
+_PYTREE_MOD = """\
+    import dataclasses
+    import jax
+
+
+    @dataclasses.dataclass
+    class Box:
+        data: object
+        name: str
+        cache: object = None
+
+        def tree_flatten(self):
+            dyn = (self.data,)
+            static = (self.name,)
+            return dyn, static
+
+        @classmethod
+        def tree_unflatten(cls, static, dyn):
+            return cls(dyn[0], static[0])
+
+
+    jax.tree_util.register_pytree_node(
+        Box, Box.tree_flatten, Box.tree_unflatten)
+"""
+
+
+def test_pytree_catches_unaccounted_field(tmp_path):
+    root = _tree(tmp_path, {"src/repro/box.py": _PYTREE_MOD})
+    hits = _findings(root, "pytree-field-unaccounted")
+    assert any(f.symbol.endswith("Box.cache") for f in hits), \
+        [f.render(root) for f in _findings(root)]
+
+
+def test_pytree_host_only_declaration_accounts_the_field(tmp_path):
+    fixed = _PYTREE_MOD.replace(
+        "cache: object = None",
+        'cache: object = None\n\n    HOST_ONLY_FIELDS = ("cache",)')
+    root = _tree(tmp_path, {"src/repro/box.py": fixed})
+    assert _findings(root, "pytree-field-unaccounted") == []
+
+
+def test_pytree_catches_double_accounted_field(tmp_path):
+    doubled = _PYTREE_MOD.replace("static = (self.name,)",
+                                  "static = (self.name, self.data)")
+    root = _tree(tmp_path, {"src/repro/box.py": doubled})
+    hits = _findings(root, "pytree-field-double-accounted")
+    assert any(f.symbol.endswith("Box.data") for f in hits)
+
+
+# -- kernel-triplet ---------------------------------------------------------
+
+_KERNEL_TREE = {
+    "src/repro/kernels/__init__.py": "",
+    "src/repro/kernels/ref.py": """\
+        import jax.numpy as jnp
+
+        def scale(x):
+            return x * 2.0
+    """,
+    "src/repro/kernels/doubler.py": """\
+        import jax.experimental.pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] * 2.0
+
+        def double_rows(x, *, interpret=False):
+            return pl.pallas_call(_kernel, out_shape=x,
+                                  interpret=interpret)(x)
+    """,
+    "src/repro/kernels/ops.py": """\
+        from . import doubler as _doubler
+        from . import ref
+
+        def double_rows(x, *, interpret=False, use_ref=False):
+            if use_ref:
+                return ref.scale(x)
+            return _doubler.double_rows(x, interpret=interpret)
+    """,
+    "tests/test_doubler.py":
+        "def test_parity():\n    assert callable('double_rows'.strip)\n",
+}
+
+
+def test_kernel_triplet_healthy_fixture_passes(tmp_path):
+    root = _tree(tmp_path, dict(_KERNEL_TREE))
+    kernel_findings = [f for f in _findings(root)
+                       if f.invariant.startswith("kernel-")]
+    assert kernel_findings == [], [f.render(root) for f in kernel_findings]
+
+
+def test_kernel_triplet_catches_orphan_kernel(tmp_path):
+    files = dict(_KERNEL_TREE)
+    files["src/repro/kernels/ops.py"] = "from . import ref\n"
+    root = _tree(tmp_path, files)
+    hits = _findings(root, "kernel-missing-dispatch")
+    assert any(f.symbol.endswith("doubler.double_rows") for f in hits)
+
+
+def test_kernel_triplet_catches_missing_interpret_and_ref(tmp_path):
+    files = dict(_KERNEL_TREE)
+    files["src/repro/kernels/ops.py"] = """\
+        from . import doubler as _doubler
+
+        def double_rows(x):
+            return _doubler.double_rows(x)
+    """
+    root = _tree(tmp_path, files)
+    assert _findings(root, "kernel-missing-interpret")
+    assert _findings(root, "kernel-missing-ref")
+
+
+def test_kernel_triplet_catches_missing_parity_test(tmp_path):
+    files = dict(_KERNEL_TREE)
+    del files["tests/test_doubler.py"]
+    root = _tree(tmp_path, files)
+    hits = _findings(root, "kernel-missing-parity-test")
+    assert any(f.symbol.endswith("doubler.double_rows") for f in hits)
+
+
+# -- knob-contract ----------------------------------------------------------
+
+_KNOB_MOD = """\
+    def resolve_budget(budget, n, k):
+        return min(budget or 4 * k, n)
+
+    def search(xs, k, budget=None):
+        return xs[:budget]
+"""
+
+
+def test_knob_catches_unvalidated_budget(tmp_path):
+    root = _tree(tmp_path, {"src/repro/api.py": _KNOB_MOD})
+    hits = _findings(root, "knob-unresolved")
+    assert any(f.symbol.endswith("search:budget") for f in hits)
+
+
+def test_knob_resolver_call_satisfies_the_contract(tmp_path):
+    fixed = _KNOB_MOD.replace(
+        "return xs[:budget]",
+        "budget = resolve_budget(budget, len(xs), k)\n    return xs[:budget]")
+    root = _tree(tmp_path, {"src/repro/api.py": fixed})
+    assert _findings(root, "knob-unresolved") == []
+
+
+def test_knob_forwarding_satisfies_the_contract(tmp_path):
+    forwarded = _KNOB_MOD.replace(
+        "return xs[:budget]",
+        "return _inner(xs, k, budget=budget)") + """\
+
+    def _inner(xs, k, budget=None):
+        budget = resolve_budget(budget, len(xs), k)
+        return xs[:budget]
+"""
+    root = _tree(tmp_path, {"src/repro/api.py": forwarded})
+    assert _findings(root, "knob-unresolved") == []
+
+
+# -- baseline mechanics -----------------------------------------------------
+
+def test_baseline_suppresses_with_reason_and_flags_stale(tmp_path):
+    root = _tree(tmp_path, {"src/repro/api.py": _KNOB_MOD})
+    rel = "src/repro/api.py"
+    sym = "repro.api.search:budget"
+
+    good = tmp_path / "baseline_good.txt"
+    good.write_text(f"knob-unresolved {rel}:{sym}  # reviewed: fixture\n")
+    assert analyze.check(root, good) == []
+
+    uncommented = tmp_path / "baseline_bare.txt"
+    uncommented.write_text(f"knob-unresolved {rel}:{sym}\n")
+    errs = analyze.check(root, uncommented)
+    assert any("no reason" in e for e in errs)
+
+    stale = tmp_path / "baseline_stale.txt"
+    stale.write_text(
+        f"knob-unresolved {rel}:{sym}  # reviewed: fixture\n"
+        f"knob-unresolved {rel}:repro.api.gone:budget  # obsolete\n")
+    errs = analyze.check(root, stale)
+    assert any("stale baseline entry" in e for e in errs)

@@ -302,14 +302,15 @@ def test_quantized_merge_compaction_preserves_points_bit_exactly():
     sf.delete(np.arange(10), auto_compact=False)
     view = sf.view()
     before = {int(i): row for i, row in
-              zip(np.asarray(view.point_ids), np.asarray(view.rows_view()))
+              zip(np.asarray(view.point_ids), np.asarray(view.rows_view()),
+                  strict=True)
               if i >= 0}
     oracle_ids, _ = _decoded_oracle(view, queries, K, fam)
 
     assert sf.compact(mode="merge") == "merge"
     view2 = sf.view()
     for i, row in zip(np.asarray(view2.point_ids),
-                      np.asarray(view2.rows_view())):
+                      np.asarray(view2.rows_view()), strict=True):
         assert np.array_equal(before[int(i)], row)
     res = search.knn_batch(sf, queries, K)
     _assert_same_neighbors(res.ids, oracle_ids)

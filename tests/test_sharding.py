@@ -31,12 +31,13 @@ MESH3 = _mesh((2, 16, 16), ("pod", "data", "model"))
 @settings(max_examples=60, deadline=None)
 def test_spec_properties(batch, seq, heads, hd):
     for mesh in (MESH, MESH3):
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))
         spec = shd.spec_for_shape(("batch", "seq", "heads", "head_dim"),
                                   (batch, seq, heads, hd), mesh)
         dims = (batch, seq, heads, hd)
         used = []
-        for dim, entry in zip(dims, tuple(spec) + (None,) * (4 - len(spec))):
+        for dim, entry in zip(dims, tuple(spec) + (None,) * (4 - len(spec)),
+                              strict=True):
             axes = (entry,) if isinstance(entry, str) else (entry or ())
             prod = 1
             for a in axes:

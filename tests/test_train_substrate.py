@@ -169,7 +169,8 @@ def test_checkpoint_roundtrip(ckpt_dir):
     ckpt.save_checkpoint(ckpt_dir, 3, tree, num_shards=3)
     assert ckpt.latest_step(ckpt_dir) == 3
     out = ckpt.restore_checkpoint(ckpt_dir, 3, tree)
-    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(x, np.float32),
                                       np.asarray(y, np.float32))
 
@@ -209,7 +210,8 @@ def test_elastic_restore_across_mesh_shapes(ckpt_dir):
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
     with mesh4:
         restored = ckpt.restore_checkpoint(ckpt_dir, 0, structs, shardings=sh)
-    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored),
+                    strict=True):
         np.testing.assert_array_equal(np.asarray(x, np.float32),
                                       np.asarray(y, np.float32))
 
@@ -289,7 +291,7 @@ def test_token_batch_step_addressable():
 
 
 def test_vector_datasets_match_table4():
-    for name, spec in data_pipe.PAPER_DATASETS.items():
+    for _name, spec in data_pipe.PAPER_DATASETS.items():
         data = data_pipe.make_vectors(spec, scale=0.001)
         assert data.shape[1] == spec.d
         if spec.measure == "isd":

@@ -1,0 +1,156 @@
+"""brelint — repo-specific static analysis for the BrePartition tree.
+
+    python -m tools.analyze [repo_root] [--baseline PATH | --no-baseline]
+
+Four stdlib-``ast`` passes over ``src/`` enforce the invariants generic
+linters cannot see (docs/static_analysis.md has the full catalog):
+
+* ``trace-safety``   — no host-only op reachable from a traced region
+  without a ``validate=False``-style opt-out (the PR 6 outage class);
+* ``pytree-contract`` — every registered pytree field accounted for
+  exactly once across children / static aux / HOST_ONLY_FIELDS, and the
+  point-table walks stay consistent;
+* ``kernel-triplet`` — every Pallas kernel ships ref oracle + interpret
+  dispatch + a parity test that names it;
+* ``knob-contract``  — public entry-point knobs flow through their named
+  resolver/validator before first use.
+
+Findings carry ``file:line``, an invariant id, and a suppression key.
+False positives are suppressed in the checked-in baseline file
+(``tools/analyze/baseline.txt``) — every entry requires a trailing
+``#``-comment saying why, and stale entries fail the run, so the
+baseline cannot rot.  Adding a pass = one module with ``run(ctx) ->
+list[Finding]`` plus a registration line in ``PASSES`` below.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from pathlib import Path
+
+from .common import Finding, Project
+from . import kernels, knobs, pytree, trace_safety
+
+BASELINE_NAME = "baseline.txt"
+
+PASSES = (
+    ("trace-safety", trace_safety.run),
+    ("pytree-contract", pytree.run),
+    ("kernel-triplet", kernels.run),
+    ("knob-contract", knobs.run),
+)
+
+
+@dataclasses.dataclass
+class Context:
+    """Everything a pass may need: repo root + the parsed project."""
+
+    root: Path
+    project: Project
+
+
+@dataclasses.dataclass
+class BaselineEntry:
+    invariant: str
+    relpath: str
+    symbol: str
+    reason: str
+    line: int          # line in the baseline file itself
+
+
+def load_baseline(path: Path) -> tuple[list[BaselineEntry], list[str]]:
+    """Parse suppressions; malformed/uncommented entries are errors."""
+    entries: list[BaselineEntry] = []
+    errors: list[str] = []
+    if not path.is_file():
+        return entries, errors
+    for lineno, raw in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        body, sep, reason = line.partition("#")
+        parts = body.split()
+        if len(parts) != 2 or ":" not in parts[1]:
+            errors.append(
+                f"{path.name}:{lineno}: malformed baseline entry "
+                f"(want `<invariant> <path>:<symbol>  # reason`): {raw}")
+            continue
+        if not sep or not reason.strip():
+            errors.append(
+                f"{path.name}:{lineno}: baseline entry has no reason "
+                "comment — every suppression must say why: " + raw)
+            continue
+        # Split on the FIRST colon: paths never contain one, but symbols
+        # may (the knob pass uses `qualname:knob` keys).
+        relpath, _, symbol = parts[1].partition(":")
+        entries.append(BaselineEntry(parts[0], relpath, symbol,
+                                     reason.strip(), lineno))
+    return entries, errors
+
+
+def analyze(root: Path) -> list[Finding]:
+    """Raw findings from every pass (no baseline applied)."""
+    src = root / "src"
+    ctx = Context(root=root, project=Project(src))
+    findings: list[Finding] = []
+    for _name, run in PASSES:
+        findings.extend(run(ctx))
+    findings.sort(key=lambda f: (f.relpath(root), f.line, f.invariant))
+    return findings
+
+
+def check(root: Path, baseline_path: Path | None = None) -> list[str]:
+    """All violations as printable strings (empty list == healthy)."""
+    root = Path(root).resolve()
+    if baseline_path is None:
+        baseline_path = Path(__file__).with_name(BASELINE_NAME)
+    entries, errors = load_baseline(baseline_path)
+    findings = analyze(root)
+    used = set()
+    out = list(errors)
+    for f in findings:
+        key = f.key(root)
+        hit = next((e for e in entries
+                    if (e.invariant, e.relpath, e.symbol) == key), None)
+        if hit is not None:
+            used.add(hit.line)
+            continue
+        out.append(f.render(root))
+    for e in entries:
+        if e.line not in used:
+            out.append(
+                f"{baseline_path.name}:{e.line}: stale baseline entry "
+                f"(no matching finding) — delete it: {e.invariant} "
+                f"{e.relpath}:{e.symbol}")
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="brelint: repo-specific static analysis")
+    parser.add_argument("root", nargs="?", default=".",
+                        help="repo root (default: cwd)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="suppression file (default: "
+                             "tools/analyze/baseline.txt)")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report raw findings, ignoring suppressions")
+    args = parser.parse_args(argv)
+    root = Path(args.root).resolve()
+    if args.no_baseline:
+        findings = analyze(root)
+        for f in findings:
+            print(f.render(root))
+        print(f"brelint (no baseline): {len(findings)} finding(s)")
+        return 1 if findings else 0
+    violations = check(root, args.baseline)
+    for v in violations:
+        print(v)
+    if not violations:
+        n_files = len(list((root / "src").rglob("*.py")))
+        print(f"brelint OK: {n_files} files, {len(PASSES)} passes, "
+              "0 findings")
+    return 1 if violations else 0

@@ -1,0 +1,167 @@
+"""brelint pass: kernel-triplet (`kernel-*`).
+
+Every public Pallas kernel entry point in ``src/repro/kernels/`` (a
+top-level function that reaches a ``pl.pallas_call`` directly or through
+a same-module helper) must ship the full triplet:
+
+* a dispatcher in ``ops.py`` that references it (the jit-facing wrapper
+  that picks pallas/interpret/ref per backend),
+* an interpret-mode dispatch — the dispatcher passes ``interpret=`` so
+  the kernel body is executable off-TPU,
+* a ref-mode branch calling an oracle that exists in ``ref.py`` (the
+  pure-jnp implementation parity tests compare against), and
+* at least one test under ``tests/`` that references the kernel or its
+  dispatcher by name.
+
+The dispatcher's own ``ref.<name>`` call is the source of truth for the
+oracle name (``flash_attention`` dispatches to ``ref.attention``), so
+renamed oracles do not need name symmetry with the kernel.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from .common import Finding, ModuleInfo, Project, dotted_name
+
+MISSING_DISPATCH = "kernel-missing-dispatch"
+MISSING_INTERPRET = "kernel-missing-interpret"
+MISSING_REF = "kernel-missing-ref"
+MISSING_TEST = "kernel-missing-parity-test"
+
+_SKIP = {"ops", "ref", "__init__"}
+
+
+def _has_pallas_call(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            dotted = dotted_name(node.func) or ""
+            if dotted.rsplit(".", 1)[-1] == "pallas_call":
+                return True
+    return False
+
+
+def _kernel_entries(mod: ModuleInfo) -> list[ast.FunctionDef]:
+    """Public top-level fns reaching pallas_call (direct or one module hop)."""
+    top = {n.name: n for n in mod.tree.body
+           if isinstance(n, ast.FunctionDef)}
+    direct = {name for name, fn in top.items() if _has_pallas_call(fn)}
+    reaches = set(direct)
+    changed = True
+    while changed:
+        changed = False
+        for name, fn in top.items():
+            if name in reaches:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and isinstance(
+                        node.func, ast.Name) and node.func.id in reaches:
+                    reaches.add(name)
+                    changed = True
+                    break
+    return [top[n] for n in sorted(reaches) if not n.startswith("_")]
+
+
+def _alias_for(ops_mod: ModuleInfo, kernel_mod: str) -> str | None:
+    for alias, (src, orig) in ops_mod.from_imports.items():
+        if f"{src}.{orig}" == kernel_mod:
+            return alias
+    for alias, target in ops_mod.imports.items():
+        if target == kernel_mod:
+            return alias
+    return None
+
+
+def run(ctx) -> list[Finding]:
+    project: Project = ctx.project
+    kernels_pkg = next((name for name in project.modules
+                        if name.endswith(".kernels.ops")), None)
+    if kernels_pkg is None:
+        return []
+    pkg = kernels_pkg.rsplit(".", 1)[0]
+    ops_mod = project.modules[kernels_pkg]
+    ref_mod = project.modules.get(f"{pkg}.ref")
+    ref_fns = {fn.name for fn in ref_mod.functions.values()} \
+        if ref_mod else set()
+    test_text = _tests_text(ctx.root)
+
+    findings: list[Finding] = []
+    for name, mod in sorted(project.modules.items()):
+        if not name.startswith(f"{pkg}."):
+            continue
+        if name.rsplit(".", 1)[-1] in _SKIP:
+            continue
+        alias = _alias_for(ops_mod, name)
+        for kernel in _kernel_entries(mod):
+            findings += _check_kernel(mod, kernel, alias, ops_mod,
+                                      ref_fns, test_text)
+    return findings
+
+
+def _check_kernel(mod: ModuleInfo, kernel: ast.FunctionDef,
+                  alias: str | None, ops_mod: ModuleInfo,
+                  ref_fns: set, test_text: str) -> list[Finding]:
+    symbol = f"{mod.name}.{kernel.name}"
+    findings = []
+    dispatchers = []
+    if alias is not None:
+        for fn in ops_mod.functions.values():
+            if not isinstance(fn.node, ast.FunctionDef):
+                continue
+            for node in ast.walk(fn.node):
+                if (isinstance(node, ast.Attribute)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id == alias
+                        and node.attr == kernel.name):
+                    dispatchers.append(fn)
+                    break
+    if not dispatchers:
+        findings.append(Finding(
+            MISSING_DISPATCH, mod.path, kernel.lineno, symbol,
+            f"Pallas kernel `{kernel.name}` has no dispatcher in "
+            "kernels/ops.py — jitted programs cannot reach it through "
+            "the backend-policy layer"))
+        return findings
+
+    has_interpret = any(
+        isinstance(node, ast.keyword) and node.arg == "interpret"
+        for d in dispatchers for node in ast.walk(d.node))
+    if not has_interpret:
+        findings.append(Finding(
+            MISSING_INTERPRET, ops_mod.path, dispatchers[0].line, symbol,
+            f"dispatcher for `{kernel.name}` never passes `interpret=` — "
+            "the kernel body cannot be exercised off-TPU"))
+
+    ref_calls = set()
+    for d in dispatchers:
+        for node in ast.walk(d.node):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "ref"):
+                ref_calls.add(node.attr)
+    if not (ref_calls & ref_fns):
+        findings.append(Finding(
+            MISSING_REF, ops_mod.path, dispatchers[0].line, symbol,
+            f"dispatcher for `{kernel.name}` has no ref.<fn> branch that "
+            "resolves in kernels/ref.py — no pure-jnp oracle to test "
+            "parity against"))
+
+    names = [kernel.name] + [d.name for d in dispatchers]
+    if not any(re.search(rf"\b{re.escape(n)}\b", test_text)
+               for n in names):
+        findings.append(Finding(
+            MISSING_TEST, mod.path, kernel.lineno, symbol,
+            f"no test under tests/ references `{kernel.name}` or its "
+            f"dispatcher(s) {sorted(set(d.name for d in dispatchers))} "
+            "by name — the triplet has no parity coverage"))
+    return findings
+
+
+def _tests_text(root: Path) -> str:
+    tests = root / "tests"
+    if not tests.is_dir():
+        return ""
+    return "\n".join(p.read_text(encoding="utf-8")
+                     for p in sorted(tests.glob("**/*.py")))

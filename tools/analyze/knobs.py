@@ -1,0 +1,170 @@
+"""brelint pass: knob-contract (`knob-unresolved`).
+
+Every *public* entry-point parameter that names an exactness/performance
+knob must flow through its named resolver/validator before first use:
+
+================  =====================================================
+knob              approved resolvers / validators
+================  =====================================================
+block_rows        resolve_block_rows, lookup_block_rows
+env_block_rows    resolve_env_block_rows, lookup_env_block_rows
+target_recall     resolve_p_guarantee, validate_target_recall, resolve
+p_guarantee       resolve_p_guarantee, validate_p_guarantee
+approx_p          resolve_p_guarantee, validate_p_guarantee
+budget            resolve_budget, default_budget, fitted_budget,
+                  fitted_budget_for_n
+deadline_s        resolve_deadline_s
+================  =====================================================
+
+A function satisfies the contract for a knob parameter when it
+
+* calls an approved resolver with that parameter in the arguments, or
+* forwards the parameter (same-named keyword, or positionally into a
+  parameter of the same name) to a function that itself satisfies the
+  contract — computed to a fixpoint, so thin public wrappers stay thin.
+
+The point is the `(None, 0)` class of defect: a knob that skips its
+validator on some path reaches the kernels with an unchecked value.
+Private helpers (leading underscore) are exempt — the contract binds
+the public surface where unvalidated values enter.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, FunctionInfo, Project, dotted_name
+
+UNRESOLVED = "knob-unresolved"
+
+KNOBS: dict[str, frozenset] = {
+    "block_rows": frozenset({"resolve_block_rows", "lookup_block_rows"}),
+    "env_block_rows": frozenset({"resolve_env_block_rows",
+                                 "lookup_env_block_rows"}),
+    "target_recall": frozenset({"resolve_p_guarantee",
+                                "validate_target_recall", "resolve"}),
+    "p_guarantee": frozenset({"resolve_p_guarantee",
+                              "validate_p_guarantee"}),
+    "approx_p": frozenset({"resolve_p_guarantee", "validate_p_guarantee"}),
+    "budget": frozenset({"resolve_budget", "default_budget",
+                         "fitted_budget", "fitted_budget_for_n"}),
+    "deadline_s": frozenset({"resolve_deadline_s"}),
+}
+
+_ALL_RESOLVERS = frozenset().union(*KNOBS.values())
+
+
+def _call_name(call: ast.Call) -> str:
+    dotted = dotted_name(call.func) or ""
+    return dotted.rsplit(".", 1)[-1]
+
+
+def _mentions(expr_list, name: str) -> bool:
+    for expr in expr_list:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Name) and sub.id == name:
+                return True
+    return False
+
+
+def _resolves_directly(fn: FunctionInfo, knob: str) -> bool:
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call) \
+                and _call_name(node) in KNOBS[knob]:
+            exprs = list(node.args) + [kw.value for kw in node.keywords]
+            if _mentions(exprs, knob):
+                return True
+        # the `knob = resolver(...)` idiom (lookup-style resolvers choose
+        # the value instead of validating a passed one)
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == knob
+                and isinstance(node.value, ast.Call)
+                and _call_name(node.value) in KNOBS[knob]):
+            return True
+    return False
+
+
+def _forward_edges(project: Project, fn: FunctionInfo,
+                   knob: str) -> list[str]:
+    """Callee qualnames this fn forwards the knob parameter into."""
+    out = []
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        target = project.resolve_call(fn.module, node, fn)
+        if target is None:
+            continue
+        callee = project.functions[target]
+        if knob not in callee.params:
+            continue
+        forwarded = any(
+            kw.arg == knob and isinstance(kw.value, ast.Name)
+            and kw.value.id == knob for kw in node.keywords)
+        if not forwarded:
+            pos = callee.positional_params()
+            offset = 1 if (pos and pos[0] in ("self", "cls")
+                           and isinstance(node.func, ast.Attribute)) else 0
+            if knob in pos:
+                idx = pos.index(knob) - offset
+                if 0 <= idx < len(node.args) and isinstance(
+                        node.args[idx], ast.Name) \
+                        and node.args[idx].id == knob:
+                    forwarded = True
+        if forwarded:
+            out.append(target)
+    return out
+
+
+def run(ctx) -> list[Finding]:
+    project: Project = ctx.project
+    # ok[(qualname, knob)] -> satisfies contract
+    holders: list[tuple[FunctionInfo, str]] = []
+    for fn in project.functions.values():
+        if not isinstance(fn.node,
+                          (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for knob in KNOBS:
+            if knob in fn.params:
+                holders.append((fn, knob))
+
+    ok: dict[tuple[str, str], bool] = {}
+    edges: dict[tuple[str, str], list[str]] = {}
+    for fn, knob in holders:
+        key = (fn.qualname, knob)
+        if fn.name in _ALL_RESOLVERS:
+            ok[key] = True       # the resolver itself
+            continue
+        ok[key] = _resolves_directly(fn, knob)
+        if not ok[key]:
+            edges[key] = _forward_edges(project, fn, knob)
+
+    changed = True
+    while changed:
+        changed = False
+        for key, targets in edges.items():
+            if ok[key]:
+                continue
+            if any(ok.get((t, key[1]), False) for t in targets):
+                ok[key] = True
+                changed = True
+
+    findings = []
+    for fn, knob in holders:
+        if ok[(fn.qualname, knob)]:
+            continue
+        if fn.name.startswith("_") or _in_private_scope(fn):
+            continue
+        findings.append(Finding(
+            UNRESOLVED, fn.module.path, fn.line, f"{fn.qualname}:{knob}",
+            f"public `{fn.name}` takes knob `{knob}` but neither calls "
+            f"an approved resolver ({', '.join(sorted(KNOBS[knob]))}) "
+            "nor forwards it to a function that does — the knob reaches "
+            "first use unvalidated"))
+    return findings
+
+
+def _in_private_scope(fn: FunctionInfo) -> bool:
+    """Nested inside a private function, or a method of a private class."""
+    parts = fn.qualname.split(".")
+    return any(p.startswith("_") for p in parts[:-1])

@@ -1,0 +1,204 @@
+"""brelint pass: pytree-contract (`pytree-*`).
+
+For every class registered as a pytree node (``register_pytree_node`` /
+``register_pytree_node_class`` / ``register_dataclass``) whose definition
+lives in the tree, each dataclass field must be accounted for **exactly
+once** across:
+
+* the dynamic children tuple returned first from ``tree_flatten``,
+* the static aux tuple returned second, and
+* an explicit class-level ``HOST_ONLY_FIELDS = (...)`` declaration for
+  fields deliberately dropped from the pytree (the ``calibration`` cache
+  that PR 8 had to hand-audit out of the flatten).
+
+Modules that define the point-table walk constants additionally get the
+walk-consistency checks: ``INERT_FILL`` keys must equal ``POINT_FIELDS``,
+``INERT_FILL_INT8`` keys must equal ``POINT_FIELDS + QUANT_FIELDS``, and
+every name in the walk constants must be a field of the registered class
+defined in the same module.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, ModuleInfo, Project, dotted_name
+
+UNACCOUNTED = "pytree-field-unaccounted"
+DOUBLE = "pytree-field-double-accounted"
+UNKNOWN = "pytree-unknown-field"
+POINT_WALK = "pytree-point-walk"
+
+_REGISTER_FNS = {"register_pytree_node", "register_pytree_node_class",
+                 "register_dataclass"}
+
+
+def _registered_classes(project: Project,
+                        mod: ModuleInfo) -> list[ast.ClassDef]:
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            dotted = dotted_name(node.func) or ""
+            if dotted.rsplit(".", 1)[-1] in _REGISTER_FNS and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name) \
+                        and target.id in mod.classes:
+                    out.append(mod.classes[target.id])
+    for cls in mod.classes.values():
+        for deco in cls.decorator_list:
+            base = deco.func if isinstance(deco, ast.Call) else deco
+            dotted = dotted_name(base) or ""
+            if dotted.rsplit(".", 1)[-1] in _REGISTER_FNS \
+                    and cls not in out:
+                out.append(cls)
+    return out
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> list[str]:
+    fields = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name):
+            ann = dotted_name(node.annotation) or ""
+            if "ClassVar" in ann:
+                continue
+            fields.append(node.target.id)
+    return fields
+
+
+def _host_only(cls: ast.ClassDef) -> list[str]:
+    for node in cls.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "HOST_ONLY_FIELDS"
+                and isinstance(node.value, (ast.Tuple, ast.List))):
+            return [e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)]
+    return []
+
+
+def _self_names(expr: ast.expr) -> list[str]:
+    names = []
+    for sub in ast.walk(expr):
+        if (isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"):
+            names.append(sub.attr)
+    return names
+
+
+def _flatten_sides(cls: ast.ClassDef) -> tuple[list[str], list[str],
+                                               int] | None:
+    """(children names, static names, lineno) from ``tree_flatten``."""
+    fn = next((n for n in cls.body
+               if isinstance(n, ast.FunctionDef)
+               and n.name == "tree_flatten"), None)
+    if fn is None:
+        return None
+    assigns = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            assigns[node.targets[0].id] = node.value
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(
+                node.value, ast.Tuple) and len(node.value.elts) == 2:
+            sides = []
+            for side in node.value.elts:
+                if isinstance(side, ast.Name) and side.id in assigns:
+                    side = assigns[side.id]
+                sides.append(_self_names(side))
+            return sides[0], sides[1], node.lineno
+    return None
+
+
+def run(ctx) -> list[Finding]:
+    project: Project = ctx.project
+    findings: list[Finding] = []
+    for mod in project.modules.values():
+        classes = _registered_classes(project, mod)
+        for cls in classes:
+            findings += _check_class(mod, cls)
+        if classes:
+            findings += _check_point_walk(project, mod, classes)
+    return findings
+
+
+def _check_class(mod: ModuleInfo, cls: ast.ClassDef) -> list[Finding]:
+    fields = _dataclass_fields(cls)
+    if not fields:       # NamedTuple/plain classes flatten themselves
+        return []
+    sides = _flatten_sides(cls)
+    if sides is None:
+        return []        # register_dataclass-style: fields are the leaves
+    children, static, line = sides
+    host_only = _host_only(cls)
+    findings = []
+    symbol = f"{mod.name}.{cls.name}"
+    counts = {f: 0 for f in fields}
+    for group in (children, static, host_only):
+        for name in group:
+            if name in counts:
+                counts[name] += 1
+            else:
+                findings.append(Finding(
+                    UNKNOWN, mod.path, line, f"{symbol}.{name}",
+                    f"`{name}` appears in {cls.name}.tree_flatten / "
+                    "HOST_ONLY_FIELDS but is not a dataclass field"))
+    for name, n in counts.items():
+        if n == 0:
+            findings.append(Finding(
+                UNACCOUNTED, mod.path, line, f"{symbol}.{name}",
+                f"field `{name}` of registered pytree {cls.name} is in "
+                "neither the flatten children, the static aux, nor "
+                "HOST_ONLY_FIELDS — it will silently vanish across "
+                "jit/device boundaries"))
+        elif n > 1:
+            findings.append(Finding(
+                DOUBLE, mod.path, line, f"{symbol}.{name}",
+                f"field `{name}` of registered pytree {cls.name} is "
+                f"accounted for {n} times across children/static/"
+                "HOST_ONLY_FIELDS"))
+    return findings
+
+
+def _check_point_walk(project: Project, mod: ModuleInfo,
+                      classes: list[ast.ClassDef]) -> list[Finding]:
+    consts = project.constants(mod)
+    point = consts.get("POINT_FIELDS")
+    if not isinstance(point, tuple):
+        return []
+    findings: list[Finding] = []
+    fields = {f for cls in classes for f in _dataclass_fields(cls)}
+    quant = consts.get("QUANT_FIELDS") or ()
+    for cname in ("POINT_FIELDS", "QUANT_FIELDS", "ENV_FIELDS",
+                  "REPLICATED_FIELDS"):
+        val = consts.get(cname)
+        if not isinstance(val, tuple):
+            continue
+        for name in val:
+            if name not in fields:
+                findings.append(Finding(
+                    POINT_WALK, mod.path, 1, f"{mod.name}.{cname}.{name}",
+                    f"`{cname}` names `{name}`, which is not a field of "
+                    "any registered pytree class in this module"))
+    for fill_name, expect in (("INERT_FILL", tuple(point)),
+                              ("INERT_FILL_INT8", tuple(point)
+                               + tuple(quant))):
+        fill = consts.get(fill_name)
+        if not isinstance(fill, dict):
+            continue
+        missing = sorted(set(expect) - set(fill))
+        extra = sorted(set(fill) - set(expect))
+        if missing or extra:
+            detail = []
+            if missing:
+                detail.append(f"missing {missing}")
+            if extra:
+                detail.append(f"extra {extra}")
+            findings.append(Finding(
+                POINT_WALK, mod.path, 1, f"{mod.name}.{fill_name}",
+                f"`{fill_name}` keys must match the point-table walk "
+                f"({'; '.join(detail)}) — pad/tombstone would corrupt "
+                "unlisted fields"))
+    return findings
