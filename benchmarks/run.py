@@ -36,6 +36,7 @@ MODULES = [
     "bench_kernels",         # kernel micro-benches
     "bench_kernel_roofline",  # fused vs unfused kernel HLO roofline terms
     "bench_recall_frontier",  # calibrated approx tier: recall-vs-QPS + ppl
+    "bench_tiered",          # out-of-core tier: fetched bytes + wall ratio
 ]
 
 

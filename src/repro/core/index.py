@@ -197,6 +197,26 @@ def point_fields(index_or_storage) -> tuple:
     return POINT_FIELDS + QUANT_FIELDS if storage == "int8" else POINT_FIELDS
 
 
+# Residency tiers (core/tiered.py).  The COLD point-major fields are the
+# ones only the post-filter stages touch — the (n, d) rows the refine
+# kernel reads and the (n, M) per-point corners the Theorem-3 prune reads
+# — exactly the tables the hoisted envelope gate can veto a block of
+# before any fetch.  Everything else is HOT: the filter phase streams
+# alpha/sqrt_gamma for every row of every query, point_ids resolves the
+# final top-k, and the replicated/envelope tables are O(n/256) small.
+COLD_POINT_FIELDS = ("data", "alpha_min_pt", "sqrt_gamma_max_pt")
+COLD_QUANT_FIELDS = ("data_scale", "data_zp", "amin_scale", "amin_zp",
+                     "gmax_scale", "gmax_zp")
+
+
+def cold_point_fields(index_or_storage) -> tuple:
+    """Field names eligible for the host-RAM cold tier (storage-aware)."""
+    storage = getattr(index_or_storage, "storage", index_or_storage)
+    if storage == "int8":
+        return COLD_POINT_FIELDS + COLD_QUANT_FIELDS
+    return COLD_POINT_FIELDS
+
+
 # Corner sentinel for padded rows: an alpha_min_pt of +PAD_CORNER makes the
 # tuple-space lower bound exceed any finite search bound, so a padded row
 # can never enter a Theorem-3 candidate set; the same value in alpha keeps

@@ -369,6 +369,12 @@ def _knn_search_jit(index: BallForest, y: Array, k: int,
 def knn_search(index, y: Array, k: int, budget: int,
                validate: bool = True) -> SearchResult:
     """Exact kNN for one query (static budget; accepts a mutable index)."""
+    if getattr(index, "is_tiered_store", False):
+        res = index.search(jnp.asarray(y, jnp.float32)[None, :], k, budget,
+                           validate=validate)
+        return SearchResult(ids=res.ids[0], dists=res.dists[0],
+                            exact=res.exact[0],
+                            num_candidates=res.num_candidates[0])
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     if validate:
@@ -418,6 +424,12 @@ def knn_search_approx(index, y: Array, k: int, budget: int,
                       p_guarantee: Array,
                       validate: bool = True) -> SearchResult:
     """§8 approximate kNN for one query (accepts a mutable index)."""
+    if getattr(index, "is_tiered_store", False):
+        res = index.search(jnp.asarray(y, jnp.float32)[None, :], k, budget,
+                           p_guarantee=p_guarantee, validate=validate)
+        return SearchResult(ids=res.ids[0], dists=res.dists[0],
+                            exact=res.exact[0],
+                            num_candidates=res.num_candidates[0])
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     validate_p_guarantee(p_guarantee)
@@ -951,6 +963,12 @@ def knn_search_batch(index, ys: Array, k: int, budget: int,
                      validate: bool = True,
                      env_block_rows: int | None = None) -> SearchResult:
     """Exact kNN for a (q, d) query block — one jitted program, (q, ...) fields."""
+    if getattr(index, "is_tiered_store", False):
+        # Out-of-core index (core/tiered.py): same pipeline, re-cut at the
+        # host/device boundary — bit-identical results by contract.
+        return index.search(ys, k, budget, block_rows=block_rows,
+                            env_block_rows=env_block_rows,
+                            validate=validate)
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     if validate:
@@ -983,6 +1001,13 @@ def knn_search_batch_approx(
     the measured-recall contract; on an uncalibrated index it falls back
     to ``p_guarantee = target_recall`` with a one-time warning.
     """
+    if getattr(index, "is_tiered_store", False):
+        if (p_guarantee is None) == (target_recall is None):
+            raise ValueError(
+                "pass exactly one of p_guarantee / target_recall")
+        return index.search(ys, k, budget, p_guarantee=p_guarantee,
+                            target_recall=target_recall,
+                            block_rows=block_rows, validate=validate)
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     if (p_guarantee is None) == (target_recall is None):
@@ -1027,6 +1052,11 @@ def knn_search_batch_stats(index, ys: Array, k: int, budget: int,
     counters; meant for benchmarks and capacity planning, not the serving
     hot path.
     """
+    if getattr(index, "is_tiered_store", False):
+        raise TypeError(
+            "knn_search_batch_stats runs the all-resident pipeline; a "
+            "TieredPointStore reports its own telemetry via store.stats / "
+            "store.cache_info(), or pass store.as_resident_forest()")
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     br = resolve_block_rows(block_rows, index.n, q=ys.shape[0],
@@ -1077,6 +1107,11 @@ def knn_search_batch_reference(index, ys: Array, k: int, budget: int,
     tests and benchmarks only; the streamed path must match it
     bit-for-bit on every output field.
     """
+    if getattr(index, "is_tiered_store", False):
+        raise TypeError(
+            "knn_search_batch_reference materializes the full (n, q) mask "
+            "on device — meaningless for an out-of-core store; pass "
+            "store.as_resident_forest() to oracle against the same points")
     index = _as_forest(index, k)
     budget = resolve_budget(budget, index.n, k)
     validate_p_guarantee(p_guarantee)
@@ -1279,8 +1314,11 @@ def knn_batch(index: BallForest, ys, k: int, budget: int | None = None,
     # Full scan instead of run(index.n): a budget=n refine would gather a
     # (q, n, d) copy of the dataset; the fused brute-force distance needs
     # no per-query row gather.  num_candidates (budget-independent) comes
-    # from the last capped run.
-    ids, dists = _brute_force_live(index, ys, k)
+    # from the last capped run.  A tiered store pays one full
+    # materialization here — the escalation is already the worst case.
+    scan_index = (index.as_resident_forest()
+                  if getattr(index, "is_tiered_store", False) else index)
+    ids, dists = _brute_force_live(scan_index, ys, k)
     res = SearchResult(ids=ids, dists=dists,
                        exact=jnp.ones(ys.shape[0], bool),
                        num_candidates=res.num_candidates)

@@ -241,6 +241,17 @@ class SegmentedForest:
         return np.concatenate(
             [ids[mask] for ids, mask in zip(self.ids_host, self.live, strict=True)])
 
+    def append_row_range(self) -> tuple[int, int]:
+        """[start, stop) rows of ``view()`` held by the append segments.
+
+        ``view()`` concatenates main first, then segments in order, so
+        the append rows are exactly the tail.  The tiered store pins
+        this range device-resident (core/tiered.py): append segments are
+        the hot, recently-written working set, and compaction folds them
+        into the sealed main — the only tier that goes cold.
+        """
+        return self.main.n, self.n
+
     # -- mutations ----------------------------------------------------------
 
     def insert(self, points, *, auto_compact: bool = True,

@@ -1,0 +1,896 @@
+"""Out-of-core tiered point store: envelope-gated host->device streaming.
+
+The batched pipeline's peak COMPUTE memory has been O(block_rows * q)
+since the streaming pass (PR 5) and the fused kernel pass (PR 7), but the
+point tables themselves still lived wholly on device, capping ``n`` at
+HBM.  This module splits a :class:`~repro.core.index.BallForest` into two
+residency tiers:
+
+* **Hot (always device-resident)** — everything the filter phase and the
+  hoisted envelope gate stream: the (n, M) filter stats ``alpha`` /
+  ``sqrt_gamma`` (int8 codes + per-row decode in the int8 tier), the
+  per-block corner envelopes ``env_alpha_min`` / ``env_sqrt_gamma_max``,
+  ``point_ids``, and the small replicated tables.  Hot bytes are
+  O(n * M) — for d=128, m=8, int8 storage that is ~1/16 of the point
+  table, which is what makes out-of-core n worthwhile at all.
+* **Cold (host RAM)** — the (n, d) point rows and the (n, M) per-point
+  corner tables (plus their decode columns in the int8 tier), held as
+  pinned numpy blocks (:data:`~repro.core.index.cold_point_fields`).
+  A cold block is fetched to device ONLY when the hoisted whole-table
+  envelope gate (the same Theorem-3 test the resident path hoists in
+  ``core.search._stream_prune_compact``) admits it for at least one
+  query — the paper's partition-filter-refinement split is exactly the
+  shape that tells us *before any transfer* which row blocks can matter.
+
+The search is the resident pipeline re-cut at the host/device boundary:
+
+1. **Stage A (one jit over hot tables)** — query transform, streaming
+   filter top-k, Alg.-4 bounds ``qb`` (+ int8 slack, + optional §8
+   shrink), then the hoisted envelope gate verbatim: a (nb, q) bool
+   admission matrix.  The cold leaves ride in the hot forest as numpy
+   arrays; ``jax.jit`` (default ``keep_unused=False``) prunes arguments
+   the traced program never reads, so they are neither transferred nor
+   compiled in (tests/test_stream_memory.py asserts the optimized HLO
+   carries no n×d-sized cold allocation).
+2. **Stage B (host loop, double-buffered)** — admitted blocks stream
+   through the per-point Theorem-3 prune kernel in index order.  While
+   block i runs, the next ``prefetch_depth`` admitted blocks' tiles are
+   already in flight via ``transfer`` (``jax.device_put``) on a
+   background executor.  Fetched bundles land in a device-side LRU block
+   cache budgeted by the validated ``resident_bytes`` knob, so repeated
+   queries against hot clusters pay zero transfer.  Per-block slot
+   filling reuses ``core.search._fill_block_slots``, so slot semantics
+   are shared with the resident scan by construction.
+3. **Stage C (one jit)** — the blocks holding selected candidates (a
+   subset of the admitted set, normally all cache hits) concatenate into
+   one refine pool; the batched refine kernel, the validity mask, and the
+   final top-k run exactly as ``core.search._refine_batch``.
+
+**Bit parity.**  Stage A reuses the resident pipeline's own helpers, the
+per-block admit kernel is the unfused ``bregman_prune_block`` whose admit
+bits the kernel-parity tests pin to the fused kernel's, the per-block
+tile padding reuses ``_corner_blocks``' inert fills, and Stage C masks
+and ranks identically to ``_refine_batch`` — so results are bit-identical
+to ``knn_search_batch`` / ``knn_search_batch_approx`` on the same point
+set (tests/test_tiered.py sweeps all five families x {fp32, int8} x
+{exact, approx}).
+
+**Resident fast path.**  When the cold tables fit the ``resident_bytes``
+budget (or the budget is ``None``), the store keeps the full device
+forest and delegates to the resident pipeline — tiering degrades to a
+no-op wrapper, never a slower copy of the same work.
+
+See docs/tiered_storage.md for the tier contract and knob guidance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeoutError
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bounds
+from . import search as _search
+from .calibrate import resolve_p_guarantee
+from .index import (
+    BallForest,
+    PAD_CORNER,
+    cold_point_fields,
+)
+from .search import (
+    POS_BIG,
+    SearchResult,
+    resolve_block_rows,
+    resolve_budget,
+    resolve_env_block_rows,
+    validate_p_guarantee,
+    validate_queries,
+)
+
+Array = jax.Array
+
+# Double-buffer depth: while block i's kernel runs, this many admitted
+# blocks beyond it are in flight on the fetch executor.  2 overlaps one
+# transfer with one kernel plus one in reserve against fetch jitter;
+# deeper pipelines only help when transfers are much slower than kernels
+# (and cost proportionally more transient device memory).
+DEFAULT_PREFETCH_DEPTH = 2
+MAX_PREFETCH_DEPTH = 64
+
+
+class FetchTimeout(RuntimeError):
+    """A host->device block fetch exceeded the store's ``fetch_timeout_s``.
+
+    Raised out of :meth:`TieredPointStore.search` so a wedged or
+    pathologically slow copy surfaces as an ordinary launch failure —
+    the serving layer's containment (retries, backoff, circuit breaker,
+    degradation ladder) handles it like any other launch exception
+    instead of blocking a microbatch forever (serve/retrieval.py).  The
+    stalled fetch keeps running in the background; a retry that arrives
+    after it lands is a cache hit.
+    """
+
+
+def resolve_resident_bytes(resident_bytes):
+    """THE ``resident_bytes`` knob resolver (brelint knob-contract).
+
+    ``None`` means "no budget": every table stays device-resident and the
+    store is a passthrough to the resident pipeline.  An explicit budget
+    must be a positive integer byte count — it bounds the device-side
+    block cache, so zero/negative/bool/float values are config errors
+    worth naming at construction, not at the first eviction.
+    """
+    if resident_bytes is None:
+        return None
+    if isinstance(resident_bytes, bool) or not isinstance(
+            resident_bytes, (int, np.integer)):
+        raise ValueError(
+            f"resident_bytes must be an int byte count or None, "
+            f"got {resident_bytes!r}")
+    rb = int(resident_bytes)
+    if rb < 1:
+        raise ValueError(
+            f"resident_bytes must be a positive byte count, got {rb}")
+    return rb
+
+
+def resolve_prefetch_depth(prefetch_depth):
+    """THE ``prefetch_depth`` knob resolver (brelint knob-contract).
+
+    ``None`` picks :data:`DEFAULT_PREFETCH_DEPTH`.  The depth is how many
+    admitted blocks beyond the one in flight are prefetched; it must be
+    an integer in [1, :data:`MAX_PREFETCH_DEPTH`] — 0 would serialize
+    every transfer behind its kernel (the double-buffering the store
+    exists to provide), and very deep pipelines just hold transient
+    device copies with no overlap left to win.
+    """
+    if prefetch_depth is None:
+        return DEFAULT_PREFETCH_DEPTH
+    if isinstance(prefetch_depth, bool) or not isinstance(
+            prefetch_depth, (int, np.integer)):
+        raise ValueError(
+            f"prefetch_depth must be an int or None, got {prefetch_depth!r}")
+    depth = int(prefetch_depth)
+    if not 1 <= depth <= MAX_PREFETCH_DEPTH:
+        raise ValueError(
+            f"prefetch_depth={depth} must be within "
+            f"[1, {MAX_PREFETCH_DEPTH}]")
+    return depth
+
+
+# ---------------------------------------------------------------------------
+# The three jitted stages
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows",
+                                             "env_block_rows", "approx"))
+def _stage_a_jit(hot: BallForest, ys: Array, k: int, block_rows: int,
+                 env_block_rows: int | None, p_guarantee: Array,
+                 approx: bool) -> dict:
+    """Filter + bounds + hoisted envelope gate over the HOT tables only.
+
+    ``hot`` carries the cold point-major fields as host numpy arrays;
+    nothing traced here reads them, so jit's unused-argument pruning
+    (``keep_unused=False``) keeps them off the device entirely — the
+    compile-time guarantee tests/test_stream_memory.py walks the
+    optimized HLO for.
+    """
+    qs = _search._query_struct(hot, ys)
+    _, idx = _search._batch_filter_topk(hot, qs, k, block_rows)
+    kth = idx[:, -1]                                    # (q,)
+    kth_tuple = _search._tuple_rows(hot, kth)
+    sqrt_term = kth_tuple["sqrt_gamma"] * qs["sqrt_delta"]       # (q, M)
+    qb = (bounds.ub_components(kth_tuple, qs)           # (q, M) Alg. 4
+          + _search._qb_slack(hot, idx, qs["sqrt_delta"]))
+    if approx:                                          # §8 shrink, batched
+        kappa_i = qb - sqrt_term
+        c = _search._cdf_shrink(hot.beta_samples, jnp.sum(sqrt_term, -1),
+                                jnp.sum(kappa_i, -1), p_guarantee)
+        qb = kappa_i + c[:, None] * sqrt_term
+
+    # Hoisted whole-table envelope gate — the same math as the fused
+    # branch of _stream_prune_compact, bit-for-bit: per-envelope-row admit
+    # in one op, per-block OR-over-span via a prefix-sum difference.
+    n = hot.alpha.shape[0]
+    q, m = qb.shape
+    bn, nb = _search._block_layout(n, block_rows)
+    eb = resolve_env_block_rows(env_block_rows)
+    win = -(-bn // eb) + 1
+    env_a, env_g = _search._env_tables(hot, n, m, eb, win, sharded=False)
+    qcT, sdT, qbT = qs["qconst"].T, qs["sqrt_delta"].T, qb.T     # (M, q)
+    goffs = jnp.arange(nb, dtype=jnp.int32) * bn
+    lb_env = (env_a[:, :, None] + qcT[None]
+              - env_g[:, :, None] * sdT[None])          # (nep, M, q)
+    row_admit = jnp.any(lb_env <= qbT[None], axis=1)    # (nep, q)
+    ecs = jnp.concatenate(
+        [jnp.zeros((1, q), jnp.int32),
+         jnp.cumsum(row_admit.astype(jnp.int32), axis=0)], axis=0)
+    e0s = goffs // eb
+    e_his = (goffs + bn - 1) // eb
+    env_admit = (jnp.take(ecs, e_his + 1, axis=0)
+                 - jnp.take(ecs, e0s, axis=0)) > 0      # (nb, q)
+    return {"qb": qb, "env_admit": env_admit,
+            "qconst": qs["qconst"], "sqrt_delta": qs["sqrt_delta"],
+            "grad": qs["grad"], "c_y": qs["c_y"]}
+
+
+def _prune_step(sel: Array, count: Array, tile: dict, qconst: Array,
+                sqrt_delta: Array, qb: Array, off, budget: int, n: int,
+                storage: str) -> tuple[Array, Array]:
+    """One admitted block: Theorem-3 admit kernel + streaming slot fill.
+
+    The block offset ``off`` is traced, so ONE compiled program serves
+    every block of the store.  The admit bits match the fused resident
+    kernel's exactly (kernel-parity tests pin fused == unfused), and
+    ``_fill_block_slots`` is the resident scan's own compaction, so the
+    carried (sel, count) stay bit-identical to ``_stream_prune_compact``
+    over the same admitted blocks.
+    """
+    from repro.kernels import ops as kernel_ops
+    if storage == "int8":
+        admit = kernel_ops.bregman_prune_block_quant(
+            tile["amin"], tile["amin_scale"], tile["amin_zp"],
+            tile["gmax"], tile["gmax_scale"], tile["gmax_zp"],
+            qconst, sqrt_delta, qb)                     # (bn, q)
+    else:
+        admit = kernel_ops.bregman_prune_block(
+            tile["amin"], tile["gmax"], qconst, sqrt_delta, qb)
+    bn = tile["amin"].shape[0]
+    gidx = off + jnp.arange(bn, dtype=jnp.int32)
+    admit = admit * (gidx < n).astype(jnp.int32)[:, None]
+    return _search._fill_block_slots(sel, count, admit, off, budget)
+
+
+_prune_step_jit = functools.partial(
+    jax.jit, static_argnames=("budget", "n", "storage"))(_prune_step)
+
+
+def _prune_pool(sel: Array, count: Array, tiles: dict, gidx: Array,
+                qconst: Array, sqrt_delta: Array, qb: Array,
+                budget: int, n: int, storage: str) -> tuple[Array, Array]:
+    """All admitted blocks in ONE dispatch over the FLAT pooled rows.
+
+    The steady-state fast path — used only when every admitted bundle is
+    already cache-resident, so no fetch can stall the fused program.
+    ``tiles`` holds the admitted blocks' corner tables concatenated
+    row-wise (pow-2 padded with inert rows); ``gidx`` maps each pooled
+    row to its global row id (pads carry ``n``, masking their admit
+    bits).  Bit parity with the sequential per-block fills: the admit
+    kernel is elementwise per row, the pool keeps ascending global
+    order, and the slot routing is integer compaction in that same
+    order — one rank search over the pool instead of one budget-sized
+    routing per block, same (sel, count) to the bit.
+    """
+    from repro.kernels import ops as kernel_ops
+    if storage == "int8":
+        admit = kernel_ops.bregman_prune_block_quant(
+            tiles["amin"], tiles["amin_scale"], tiles["amin_zp"],
+            tiles["gmax"], tiles["gmax_scale"], tiles["gmax_zp"],
+            qconst, sqrt_delta, qb)                     # (pn, q)
+    else:
+        admit = kernel_ops.bregman_prune_block(
+            tiles["amin"], tiles["gmax"], qconst, sqrt_delta, qb)
+    admit = admit * (gidx < n).astype(jnp.int32)[:, None]
+    # _fill_block_slots with a gather-map: identical rank-compaction, but
+    # local pool rows resolve to global ids through gidx instead of a
+    # scalar block offset.
+    pn = admit.shape[0]
+    csum = jnp.cumsum(admit, axis=0)                     # (pn, q)
+    tot = csum[-1]                                       # (q,)
+    t_ranks = min(pn, budget)
+    ranks = jnp.arange(1, t_ranks + 1, dtype=jnp.int32)
+    rows_for_rank = jax.vmap(
+        lambda c: jnp.searchsorted(c, ranks, side="left"))(csum.T)
+    rows_for_rank = jnp.minimum(rows_for_rank,
+                                pn - 1).astype(jnp.int32)  # (q, T)
+    r0 = (jnp.arange(budget, dtype=jnp.int32)[None, :]
+          - count[:, None])                              # rank-1
+    fill = (r0 >= 0) & (r0 < tot[:, None])
+    rows_at_slot = jnp.take_along_axis(
+        rows_for_rank, jnp.clip(r0, 0, t_ranks - 1), axis=1)
+    sel = jnp.where(fill, jnp.take(gidx, rows_at_slot), sel)
+    return sel, count + tot
+
+
+def _refine_tiles(tiles: dict, pos_of: Array, sel: Array, count: Array,
+                  grad: Array, c_y: Array, point_ids: Array, k: int,
+                  family_name: str, storage: str, bn: int, budget: int):
+    """Batched refine over the fetched candidate blocks.
+
+    ``tiles`` is the concatenation of the admitted blocks' data tiles;
+    ``pos_of`` maps a global block id to its pool slot, so the global
+    candidate rows remap in-jit (no host round-trip on ``sel``).  Every
+    VALID candidate comes from an admitted block by construction —
+    invalid slots map anywhere in range and are masked to +BIG exactly
+    as the resident ``_refine_batch`` masks them, so they cannot affect
+    the top-k.  ``sel`` stays GLOBAL: ids come from ``point_ids[sel]``
+    with the original selection, so even never-filled slots resolve to
+    the same id the resident path reports.
+    """
+    from repro.kernels import ops as kernel_ops
+    targets = jnp.arange(1, budget + 1, dtype=jnp.int32)
+    valid = targets[None, :] <= jnp.minimum(count, budget)[:, None]
+    lsel = jnp.take(pos_of, sel // bn) * bn + sel % bn  # (q, budget)
+    if storage == "int8":
+        codes = jnp.take(tiles["data"], lsel, axis=0)   # (q, budget, d) int8
+        scale = jnp.take(tiles["data_scale"], lsel)     # (q, budget)
+        zp = jnp.take(tiles["data_zp"], lsel)
+        dist = kernel_ops.bregman_refine_batch_quant(
+            codes, scale, zp, grad, c_y, family_name)
+    else:
+        rows = jnp.take(tiles["data"], lsel, axis=0)    # (q, budget, d)
+        dist = kernel_ops.bregman_refine_batch(
+            rows, grad, c_y, family_name)               # (q, budget)
+    dist = jnp.where(valid, dist, POS_BIG)
+    neg, pos = jax.lax.top_k(-dist, k)                  # (q, k)
+    ids = jnp.take(point_ids, jnp.take_along_axis(sel, pos, axis=1))
+    return ids, -neg
+
+
+_refine_tiles_jit = functools.partial(
+    jax.jit, static_argnames=("k", "family_name", "storage", "bn",
+                              "budget"))(_refine_tiles)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "family_name", "storage",
+                                             "bn", "budget", "n"))
+def _pool_search_jit(stacked: dict, gidx: Array, big: dict, pos_of: Array,
+                     qconst: Array, sqrt_delta: Array, qb: Array,
+                     grad: Array, c_y: Array, point_ids: Array, k: int,
+                     family_name: str, storage: str, bn: int, budget: int,
+                     n: int):
+    """Steady-state Stages B+C in ONE dispatch: pooled prune then refine.
+
+    Used only when every admitted bundle is cache-resident, so no fetch
+    can stall the fused program.  Composes the exact `_prune_pool` and
+    `_refine_tiles` bodies — one compiled program instead of two keeps
+    the per-search dispatch overhead off the critical path.  The (sel,
+    count) carry always enters this path at its init value, so it is
+    materialized in-jit rather than transferred.
+    """
+    q = c_y.shape[0]
+    sel = jnp.full((q, budget), n - 1, jnp.int32)
+    count = jnp.zeros((q,), jnp.int32)
+    sel, count = _prune_pool(sel, count, stacked, gidx, qconst,
+                             sqrt_delta, qb, budget, n, storage)
+    ids, dists = _refine_tiles(big, pos_of, sel, count, grad, c_y,
+                               point_ids, k, family_name, storage, bn,
+                               budget)
+    return ids, dists, count
+
+
+# Host-side per-field padding fills for the cold block tables, mirroring
+# core.search._corner_blocks / index.INERT_FILL bit-for-bit: padded rows
+# must fail every Theorem-3 admission (f32 corners +BIG/0; int8 corner
+# codes 0 with the +BIG sentinel riding in a zero-scale zero-point) and
+# decode to a domain-safe data row (never read — sel is always < n — but
+# harmless even if a kernel touches it).
+_PAD_FILLS_F32 = {"alpha_min_pt": POS_BIG, "sqrt_gamma_max_pt": 0.0,
+                  "data": 1.0}
+_PAD_FILLS_INT8 = {"alpha_min_pt": 0, "sqrt_gamma_max_pt": 0, "data": 0,
+                   "amin_scale": 0.0, "amin_zp": PAD_CORNER,
+                   "gmax_scale": 0.0, "gmax_zp": 0.0,
+                   "data_scale": 0.0, "data_zp": 1.0}
+
+# Cold-field -> tile-name maps: which bundle (prune vs refine) each cold
+# table feeds, under the kernel-facing names the jitted stages use.
+_PRUNE_TILE = {"alpha_min_pt": "amin", "sqrt_gamma_max_pt": "gmax",
+               "amin_scale": "amin_scale", "amin_zp": "amin_zp",
+               "gmax_scale": "gmax_scale", "gmax_zp": "gmax_zp"}
+_REFINE_TILE = {"data": "data", "data_scale": "data_scale",
+                "data_zp": "data_zp"}
+
+
+class TieredPointStore:
+    """Two-tier residency wrapper around a sealed BallForest snapshot.
+
+    Build with :meth:`from_index` (accepts a BallForest or a mutable
+    SegmentedForest — the snapshot is FROZEN at construction, the same
+    policy as the sharded tenants in serve/retrieval.py: re-wrap after
+    mutating).  Every ``core.search`` public entry point routes a store
+    to :meth:`search` via the ``is_tiered_store`` marker, so callers use
+    one API for both residency modes.
+
+    Not thread-safe for CONCURRENT searches (the fetch executor is the
+    only internal concurrency); the single-threaded service loop and the
+    in-process hooks are the intended drivers.
+    """
+
+    is_tiered_store = True
+
+    def __init__(self, snapshot: BallForest, *, resident_bytes=None,
+                 prefetch_depth=None, block_rows=None,
+                 pinned_row_range: tuple[int, int] | None = None,
+                 transfer=None, fetch_timeout_s: float | None = None):
+        self.resident_bytes = resolve_resident_bytes(resident_bytes)
+        self.prefetch_depth = resolve_prefetch_depth(prefetch_depth)
+        n = snapshot.n
+        self.block_rows = resolve_block_rows(block_rows, n,
+                                             storage=snapshot.storage)
+        self.fetch_timeout_s = fetch_timeout_s
+        self._transfer = jax.device_put if transfer is None else transfer
+        self._lock = threading.Lock()
+        ids_host = np.asarray(snapshot.point_ids)
+        self._live_n = int((ids_host >= 0).sum())
+        self.stats = self._zero_stats()
+
+        cold = cold_point_fields(snapshot)
+        host = {f: np.asarray(getattr(snapshot, f)) for f in cold}
+        self.cold_bytes = int(sum(a.nbytes for a in host.values()))
+        self._bn, self._nb = _search._block_layout(n, self.block_rows)
+
+        if self.resident_bytes is None or \
+                self.cold_bytes <= self.resident_bytes:
+            # Resident fast path: everything fits the budget — keep the
+            # full device forest and delegate.  No executor, no cache, no
+            # host copy kept alive.
+            self._resident: BallForest | None = snapshot
+            self._hot = snapshot
+            self._blocks = None
+            self._pool = None
+            self._cache: OrderedDict[int, dict] = OrderedDict()
+            self._futures: dict = {}
+            self._pinned: frozenset[int] = frozenset()
+            self._cache_bytes = 0
+            self._pool_cache = None
+            self._inert_prune = None
+            return
+
+        self._resident = None
+        # The hot forest: cold point-major leaves become the host arrays
+        # themselves.  dataclasses.replace keeps statics and the host-only
+        # calibration; jit prunes the (unused) numpy leaves per stage.
+        self._hot = dataclasses.replace(snapshot, **host)
+        fills = (_PAD_FILLS_INT8 if snapshot.storage == "int8"
+                 else _PAD_FILLS_F32)
+        bn, nb = self._bn, self._nb
+        pad = nb * bn - n
+        self._blocks = {}
+        for f, arr in host.items():
+            widths = ((0, pad),) + ((0, 0),) * (arr.ndim - 1)
+            padded = np.pad(arr, widths, constant_values=fills[f])
+            self._blocks[f] = np.ascontiguousarray(
+                padded.reshape((nb, bn) + arr.shape[1:]))
+        self._cache = OrderedDict()
+        self._cache_bytes = 0
+        self._futures = {}
+        self._inert_refine: dict | None = None
+        self._inert_prune: dict | None = None
+        # Single-entry pooled-program cache for the steady-state fast
+        # path: (admitted-set key, stacked prune tiles, offsets, pooled
+        # refine tiles, block->slot map).  Holds ONE extra device copy of
+        # the admitted set (bounded by resident_bytes, reported in
+        # cache_info as pool_bytes).
+        self._pool_cache: tuple | None = None
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.prefetch_depth,
+            thread_name_prefix="tiered-fetch")
+        # Append-segment rows (pinned_row_range) stay device-resident:
+        # their blocks are pre-fetched here and never evicted, so a
+        # freshly inserted point costs no transfer on its first query.
+        pinned: set[int] = set()
+        if pinned_row_range is not None:
+            lo, hi = pinned_row_range
+            if hi > lo:
+                pinned = set(range(lo // bn, -(-hi // bn)))
+        self._pinned = frozenset(pinned)
+        for bid in sorted(self._pinned):
+            self._insert_cache(bid, self._fetch_block(bid))
+
+    @staticmethod
+    def _zero_stats() -> dict:
+        return {"queries": 0, "searches": 0, "fetches": 0,
+                "host_bytes_fetched": 0, "cache_hits": 0, "cache_misses": 0,
+                "blocks_admitted": 0, "blocks_total": 0}
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index, *, resident_bytes=None, prefetch_depth=None,
+                   block_rows=None, transfer=None,
+                   fetch_timeout_s: float | None = None
+                   ) -> "TieredPointStore":
+        """Tier a BallForest or SegmentedForest snapshot.
+
+        A mutable index is snapshotted through ``view()`` and its append
+        segments' row range (``append_row_range``) is PINNED in the block
+        cache — append segments stay resident, only the sealed main can
+        tier (core/segments.py).  The snapshot is frozen: mutate-then-
+        re-wrap, exactly like the sharded-tenant policy.
+        """
+        resident_bytes = resolve_resident_bytes(resident_bytes)
+        prefetch_depth = resolve_prefetch_depth(prefetch_depth)
+        snapshot = index
+        pinned = None
+        view = getattr(index, "view", None)
+        if callable(view):
+            snapshot = view()
+            rng = getattr(index, "append_row_range", None)
+            if callable(rng):
+                pinned = rng()
+        block_rows = resolve_block_rows(block_rows, snapshot.n,
+                                        storage=snapshot.storage)
+        return cls(snapshot, resident_bytes=resident_bytes,
+                   prefetch_depth=prefetch_depth, block_rows=block_rows,
+                   pinned_row_range=pinned, transfer=transfer,
+                   fetch_timeout_s=fetch_timeout_s)
+
+    # -- index-protocol surface --------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self._hot.n
+
+    @property
+    def d(self) -> int:
+        return self._hot.d
+
+    @property
+    def m(self) -> int:
+        return self._hot.m
+
+    @property
+    def family(self):
+        return self._hot.family
+
+    @property
+    def family_name(self) -> str:
+        return self._hot.family_name
+
+    @property
+    def storage(self) -> str:
+        return self._hot.storage
+
+    @property
+    def calibration(self):
+        return self._hot.calibration
+
+    @property
+    def live_n(self) -> int:
+        return self._live_n
+
+    @property
+    def is_resident(self) -> bool:
+        """True when the resident fast path is active (no tiering)."""
+        return self._resident is not None
+
+    @property
+    def num_blocks(self) -> int:
+        return self._nb
+
+    def as_resident_forest(self) -> BallForest:
+        """Materialize the FULL device forest (one O(n) transfer).
+
+        The escape hatch for paths that genuinely need every row on
+        device at once — today only ``knn_batch``'s budget-cap linear
+        scan.  Deliberately uncached: holding the result would defeat
+        the residency budget, so callers own its lifetime.
+        """
+        if self._resident is not None:
+            return self._resident
+        return dataclasses.replace(self._hot, **{
+            f: jnp.asarray(getattr(self._hot, f))
+            for f in cold_point_fields(self._hot)})
+
+    def reset_stats(self) -> None:
+        self.stats = self._zero_stats()
+
+    def cache_info(self) -> dict:
+        """Block-cache occupancy snapshot (bench/telemetry surface)."""
+        pool_bytes = 0
+        if self._pool_cache is not None:
+            _, stacked, _, big, _ = self._pool_cache
+            pool_bytes = int(sum(x.nbytes for x in stacked.values())
+                             + sum(x.nbytes for x in big.values()))
+        return {"blocks_cached": len(self._cache),
+                "bytes_cached": self._cache_bytes,
+                "pool_bytes": pool_bytes,
+                "pinned_blocks": len(self._pinned),
+                "num_blocks": self._nb,
+                "resident_bytes": self.resident_bytes,
+                "cold_bytes": self.cold_bytes,
+                "resident_fast_path": self.is_resident}
+
+    def close(self) -> None:
+        """Shut down the fetch executor (idempotent)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None
+
+    # -- cache + fetch machinery -------------------------------------------
+
+    def _fetch_block(self, bid: int) -> dict:
+        """Copy one cold block host->device; returns the bundle dict.
+
+        Runs on the fetch executor.  One bundle carries BOTH the prune
+        tile and the refine tile, so a block admitted by the gate is
+        fetched once and serves both downstream stages.
+        """
+        tiles_np = {f: blocks[bid] for f, blocks in self._blocks.items()}
+        host_nbytes = int(sum(a.nbytes for a in tiles_np.values()))
+        dev = self._transfer(tiles_np)
+        prune = {_PRUNE_TILE[f]: dev[f] for f in dev if f in _PRUNE_TILE}
+        refine = {_REFINE_TILE[f]: dev[f] for f in dev if f in _REFINE_TILE}
+        nbytes = int(sum(x.nbytes for x in dev.values()))
+        return {"prune": prune, "refine": refine,
+                "host_nbytes": host_nbytes, "nbytes": nbytes}
+
+    def _insert_cache(self, bid: int, bundle: dict) -> None:
+        self._cache[bid] = bundle
+        self._cache.move_to_end(bid)
+        self._cache_bytes += bundle["nbytes"]
+        if self.resident_bytes is None:
+            return
+        # Evict LRU-first until under budget; the block just inserted and
+        # the pinned (append-segment) blocks are never evicted, so the
+        # cache may transiently exceed a budget smaller than one bundle.
+        for victim in list(self._cache):
+            if self._cache_bytes <= self.resident_bytes:
+                break
+            if victim == bid or victim in self._pinned:
+                continue
+            self._cache_bytes -= self._cache.pop(victim)["nbytes"]
+
+    def _ensure_inflight(self, bid: int) -> None:
+        with self._lock:
+            if bid in self._cache or bid in self._futures:
+                return
+            self._futures[bid] = self._pool.submit(self._fetch_block, bid)
+
+    def _block(self, bid: int) -> dict:
+        """Resolve one block: cache hit, or wait on its (pre)fetch."""
+        with self._lock:
+            cached = self._cache.get(bid)
+            if cached is not None:
+                self.stats["cache_hits"] += 1
+                self._cache.move_to_end(bid)
+                return cached
+            fut = self._futures.get(bid)
+            if fut is None:
+                fut = self._pool.submit(self._fetch_block, bid)
+                self._futures[bid] = fut
+        try:
+            bundle = fut.result(timeout=self.fetch_timeout_s)
+        except _FutureTimeoutError:
+            raise FetchTimeout(
+                f"host->device fetch of block {bid} exceeded "
+                f"fetch_timeout_s={self.fetch_timeout_s}s; the transfer "
+                f"keeps running — a retry may hit the cache") from None
+        with self._lock:
+            self._futures.pop(bid, None)
+            if bid not in self._cache:
+                self.stats["cache_misses"] += 1
+                self.stats["fetches"] += 1
+                self.stats["host_bytes_fetched"] += bundle["host_nbytes"]
+                self._insert_cache(bid, bundle)
+        return bundle
+
+    def warm_cache(self) -> dict:
+        """Pre-populate the block cache up to the residency budget.
+
+        Fetches blocks in index order until the next bundle would exceed
+        ``resident_bytes`` (pinned blocks are already cached).  Startup
+        warming — the service's ``warm()`` API calls this after priming
+        the compiled-program caches, so first-query latency pays neither
+        compilation nor transfer.  Fetches here do NOT count toward the
+        per-query stats.
+        """
+        if self._resident is not None:
+            return {"blocks_cached": 0,
+                    "bytes_cached": 0, "resident_fast_path": True}
+        for bid in range(self._nb):
+            if bid in self._cache:
+                continue
+            bundle = self._fetch_block(bid)
+            if (self._cache_bytes + bundle["nbytes"] > self.resident_bytes
+                    and bid not in self._pinned):
+                break
+            self._insert_cache(bid, bundle)
+        return {"blocks_cached": len(self._cache),
+                "bytes_cached": self._cache_bytes,
+                "resident_fast_path": False}
+
+    def _inert_refine_tile(self) -> dict:
+        """One device-resident inert data tile for pow-2 pool padding."""
+        if self._inert_refine is None:
+            bn, d = self._bn, self.d
+            if self.storage == "int8":
+                self._inert_refine = {
+                    "data": jnp.zeros((bn, d), jnp.int8),
+                    "data_scale": jnp.zeros((bn,), jnp.float32),
+                    "data_zp": jnp.ones((bn,), jnp.float32)}
+            else:
+                self._inert_refine = {
+                    "data": jnp.ones((bn, d), jnp.float32)}
+        return self._inert_refine
+
+    def _inert_prune_tile(self) -> dict:
+        """One inert corner tile for pow-2 prune-pool padding (its rows
+        carry the same reject-everything sentinels as the tail pad)."""
+        if self._inert_prune is None:
+            fills = (_PAD_FILLS_INT8 if self.storage == "int8"
+                     else _PAD_FILLS_F32)
+            self._inert_prune = {
+                _PRUNE_TILE[f]: jnp.full(blocks.shape[1:], fills[f],
+                                         blocks.dtype)
+                for f, blocks in self._blocks.items() if f in _PRUNE_TILE}
+        return self._inert_prune
+
+    def _pooled(self, key: tuple) -> tuple:
+        """Stacked prune tiles + pooled refine tiles for one admitted set.
+
+        Precondition: every block in ``key`` is cache-resident (the
+        caller checked), so the ``_block`` calls below are hits.  The
+        result is memoized single-entry — steady-state traffic repeats
+        the same admitted set, so the stack/concat cost is paid once per
+        working-set change, and both pools are padded to a power-of-two
+        block count to keep the compiled-program cache O(log nb).
+        """
+        cached = self._pool_cache
+        if cached is not None and cached[0] == key:
+            # The pool reuse IS a cache hit for every block in the set —
+            # count them so steady-state hit rate reads 1.0, not 0/0.
+            self.stats["cache_hits"] += len(key)
+            return cached[1:]
+        bn = self._bn
+        bundles = [self._block(b) for b in key]
+        pool = 1 << (len(key) - 1).bit_length()
+        pad = pool - len(key)
+        prune_tiles = [b["prune"] for b in bundles] \
+            + [self._inert_prune_tile()] * pad
+        stacked = {nm: jnp.concatenate([t[nm] for t in prune_tiles],
+                                       axis=0)
+                   for nm in prune_tiles[0]}
+        # pad rows ride with gidx = n: every admit bit masks to zero
+        gidx_np = np.concatenate(
+            [np.arange(b * bn, b * bn + bn, dtype=np.int32) for b in key]
+            + [np.full(bn, self.n, np.int32)] * pad)
+        offs = jnp.asarray(gidx_np)
+        refine_tiles = [b["refine"] for b in bundles] \
+            + [self._inert_refine_tile()] * pad
+        big = {nm: jnp.concatenate([t[nm] for t in refine_tiles], axis=0)
+               for nm in refine_tiles[0]}
+        pos_np = np.zeros(self._nb, np.int32)
+        pos_np[list(key)] = np.arange(len(key), dtype=np.int32)
+        pos_of = jnp.asarray(pos_np)
+        self._pool_cache = (key, stacked, offs, big, pos_of)
+        return stacked, offs, big, pos_of
+
+    # -- search -------------------------------------------------------------
+
+    def search(self, ys, k: int, budget: int | None = None, *,
+               p_guarantee=None, target_recall: float | None = None,
+               block_rows: int | None = None,
+               env_block_rows: int | None = None,
+               validate: bool = True) -> SearchResult:
+        """Batched kNN over the tiered store — bit-identical to the
+        resident ``knn_search_batch`` (or ``..._approx`` when one of
+        ``p_guarantee`` / ``target_recall`` is given) on the same points.
+
+        ``block_rows`` was pinned at construction (the host blocks are
+        physically cut at that granularity); passing a different explicit
+        value is a programming error and raises.  ``env_block_rows``
+        only coarsens the envelope gate — results are invariant, the
+        admitted-block set is not.
+        """
+        if p_guarantee is not None and target_recall is not None:
+            raise ValueError(
+                "pass at most one of p_guarantee / target_recall")
+        if target_recall is not None:
+            p_guarantee, _ = resolve_p_guarantee(self, target_recall)
+        validate_p_guarantee(p_guarantee)
+        budget = resolve_budget(budget, self.n, k)
+        if block_rows is not None:
+            br = resolve_block_rows(block_rows, self.n, storage=self.storage)
+            if br != self.block_rows:
+                raise ValueError(
+                    f"block_rows={br} conflicts with the store's pinned "
+                    f"block size {self.block_rows} (host blocks are cut at "
+                    f"construction; rebuild the store to change it)")
+        eb = resolve_env_block_rows(env_block_rows)
+        ys = jnp.asarray(ys, jnp.float32)
+        if ys.ndim != 2:
+            raise ValueError(f"expected (q, d) queries, got {ys.shape}")
+        if validate:
+            validate_queries(self.family, ys)
+
+        if self._resident is not None:
+            if p_guarantee is None:
+                return _search.knn_search_batch(
+                    self._resident, ys, k, budget, self.block_rows,
+                    validate=False, env_block_rows=eb)
+            return _search.knn_search_batch_approx(
+                self._resident, ys, k, budget, jnp.float32(p_guarantee),
+                self.block_rows, validate=False)
+        return self._search_tiered(ys, k, budget, p_guarantee, eb)
+
+    def _search_tiered(self, ys: Array, k: int, budget: int,
+                       p_guarantee, env_block_rows: int) -> SearchResult:
+        q = ys.shape[0]
+        n, bn, nb = self.n, self._bn, self._nb
+        approx = p_guarantee is not None
+        p = jnp.float32(p_guarantee if approx else 0.0)
+
+        # Stage A: hot-only jit — filter, bounds, envelope admission.
+        a = _stage_a_jit(self._hot, ys, k, self.block_rows, env_block_rows,
+                         p, approx)
+        env_admit = np.asarray(a["env_admit"])          # (nb, q) bool
+        # A block runs (for ALL query columns) iff ANY query admits it —
+        # the resident scan's lax.cond gate, decided on the host so
+        # rejected blocks are never fetched at all.
+        admitted = np.nonzero(env_admit.any(axis=1))[0].tolist()
+        self.stats["blocks_admitted"] += len(admitted)
+        self.stats["blocks_total"] += nb
+        self.stats["queries"] += int(q)
+        self.stats["searches"] += 1
+
+        if not admitted:
+            sel = jnp.full((q, budget), n - 1, jnp.int32)
+            count = jnp.zeros((q,), jnp.int32)
+            # No query admitted anything: every slot is masked to +BIG, so
+            # the resident top-k degenerates to the first k slots in order
+            # (lax.top_k ties resolve to the lower index) — reproduce that
+            # without fetching anything.
+            ids = jnp.take(self._hot.point_ids, sel[:, :k])
+            dists = jnp.full((q, k), POS_BIG, jnp.float32)
+            return SearchResult(ids=ids, dists=dists, exact=count <= budget,
+                                num_candidates=count)
+
+        with self._lock:
+            all_cached = all(b in self._cache for b in admitted)
+        if all_cached:
+            # Steady-state fast path: every admitted bundle is already on
+            # device, so Stages B+C collapse to ONE fused program over
+            # the memoized stacked pool — no per-block dispatch, no
+            # fetch, one launch for prune + refine + top-k.
+            stacked, offs, big, pos_of = self._pooled(tuple(admitted))
+            ids, dists, count = _pool_search_jit(
+                stacked, offs, big, pos_of, a["qconst"], a["sqrt_delta"],
+                a["qb"], a["grad"], a["c_y"], self._hot.point_ids, k,
+                self.family_name, self.storage, bn, budget, n)
+            return SearchResult(ids=ids, dists=dists,
+                                exact=count <= budget,
+                                num_candidates=count)
+        # Stage B: double-buffered host loop over the admitted blocks —
+        # prefetch runs ``prefetch_depth`` bundles ahead while the
+        # current block's prune kernel executes.
+        sel = jnp.full((q, budget), n - 1, jnp.int32)
+        count = jnp.zeros((q,), jnp.int32)
+        depth = self.prefetch_depth
+        for j, bid in enumerate(admitted):
+            for ahead in admitted[j:j + 1 + depth]:
+                self._ensure_inflight(ahead)
+            bundle = self._block(bid)
+            sel, count = _prune_step_jit(
+                sel, count, bundle["prune"], a["qconst"],
+                a["sqrt_delta"], a["qb"], bid * bn, budget, n,
+                self.storage)
+        # Stage C pool: every valid candidate lives in an admitted
+        # block, so the refine pool is the admitted set itself — no
+        # device->host sync on sel to discover it.  Blocks evicted
+        # mid-loop (budget below the admitted working set) refetch.
+        pool = 1 << (len(admitted) - 1).bit_length()
+        for b in admitted:
+            self._ensure_inflight(b)
+        tiles = [self._block(b)["refine"] for b in admitted]
+        tiles.extend([self._inert_refine_tile()]
+                     * (pool - len(tiles)))
+        big = {name: jnp.concatenate([t[name] for t in tiles], axis=0)
+               for name in tiles[0]}
+        pos_np = np.zeros(nb, np.int32)
+        pos_np[admitted] = np.arange(len(admitted), dtype=np.int32)
+        pos_of = jnp.asarray(pos_np)
+
+        ids, dists = _refine_tiles_jit(
+            big, pos_of, sel, count, a["grad"], a["c_y"],
+            self._hot.point_ids, k, self.family_name, self.storage, bn,
+            budget)
+        return SearchResult(ids=ids, dists=dists, exact=count <= budget,
+                            num_candidates=count)

@@ -220,6 +220,56 @@ class ShardStall(Fault):
 
 
 @dataclasses.dataclass
+class FetchStall(Fault):
+    """A slow/wedged host->device cold-block fetch on a TIERED tenant.
+
+    Applies only when the tenant record carries a TieredPointStore
+    (``tenant_obj.tiered`` — core/tiered.py); fully-resident tenants have
+    no fetch to stall, so the fault is a no-op there.  Two regimes,
+    matching what a real stalled DMA does:
+
+    * ``stall_s`` within the store's ``fetch_timeout_s``: the copy is
+      merely slow — the launch completes and the stall rides the clock
+      like a latency spike, so deadlines and the cost model see it.
+    * ``stall_s`` beyond ``fetch_timeout_s``: the store would abandon the
+      wait and raise ``FetchTimeout`` — this fault does exactly that
+      (after charging the timeout window to the clock), so the service's
+      containment (retry/backoff/breaker, then the degradation ladder)
+      is exercised instead of a microbatch wedging on the copy.
+    """
+
+    stall_s: float
+    at_launches: object = None
+    tenant: str | None = None
+
+    def before_launch(self, ctx, rng, record) -> float:
+        if self.tenant is not None and ctx.tenant != self.tenant:
+            return 0.0
+        if not _matches(self.at_launches, ctx.index):
+            return 0.0
+        store = getattr(ctx.tenant_obj, "tiered", None)
+        if store is None:
+            return 0.0
+        timeout = getattr(store, "fetch_timeout_s", None)
+        if timeout is not None and self.stall_s > timeout:
+            record(FaultEvent(
+                "fetch_stall", "launch", ctx.index, ctx.tenant,
+                f"+{self.stall_s:.3f}s > fetch_timeout_s={timeout:.3f}s "
+                f"-> FetchTimeout"))
+            if ctx.service is not None:
+                # A real timed-out fetch still costs the full wait window.
+                ctx.service.clock.sleep(timeout)
+            from repro.core.tiered import FetchTimeout
+            raise FetchTimeout(
+                f"injected: host->device fetch stalled {self.stall_s:.3f}s, "
+                f"exceeding fetch_timeout_s={timeout:.3f}s "
+                f"(launch {ctx.index}, tier {ctx.tier})")
+        record(FaultEvent("fetch_stall", "launch", ctx.index, ctx.tenant,
+                          f"+{self.stall_s:.3f}s tier={ctx.tier}"))
+        return self.stall_s
+
+
+@dataclasses.dataclass
 class LaunchError(Fault):
     """Raise on matching launches (device loss, OOM, compile failure)."""
 

@@ -64,11 +64,41 @@ class Datastore:
     # deployments that cannot absorb that pause on the request path set
     # False and call index.compact() from a maintenance tick instead.
     auto_compact: bool = True
+    # Out-of-core residency (core/tiered.py): with a byte budget, lookups
+    # run against a TieredPointStore snapshot — cold key blocks in host
+    # RAM, fetched on envelope admission — so the value of n is capped by
+    # host RAM, not HBM.  None keeps the store fully device-resident.
+    resident_bytes: int | None = None
+    prefetch_depth: int | None = None
+    _tiered: object = dataclasses.field(default=None, init=False,
+                                        repr=False)
+    _tiered_version: int = dataclasses.field(default=-1, init=False,
+                                             repr=False)
 
     @property
     def storage(self) -> str:
         """Key-table storage tier ("f32" | "int8" — see build_datastore)."""
         return self.index.storage
+
+    def search_index(self):
+        """The object lookups should search: the index itself, or — with
+        a ``resident_bytes`` budget — a TieredPointStore snapshot of it,
+        rebuilt lazily whenever :attr:`version` moves (the store freezes
+        its snapshot at construction, so a grow/evict invalidates it the
+        same way it invalidates the device value table)."""
+        if self.resident_bytes is None:
+            return self.index
+        if self._tiered is None or self._tiered_version != self.version:
+            from repro.core.tiered import TieredPointStore
+            old, self._tiered = self._tiered, None
+            if old is not None:
+                old.close()
+            self._tiered = TieredPointStore.from_index(
+                self.index, resident_bytes=self.resident_bytes,
+                prefetch_depth=self.prefetch_depth,
+                block_rows=self.block_rows)
+            self._tiered_version = self.version
+        return self._tiered
 
     def _mutable(self) -> SegmentedForest:
         if not isinstance(self.index, SegmentedForest):
@@ -114,6 +144,8 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
                     m: int | None = None, quantize: bool = False,
                     block_rows: int | None = None,
                     calibrate: bool = False, calibrate_k: int = 8,
+                    resident_bytes: int | None = None,
+                    prefetch_depth: int | None = None,
                     seed: int = 0) -> Datastore:
     """Teacher-forced pass over (num_seqs, seq_len) tokens -> datastore.
 
@@ -131,7 +163,16 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
     ``KNNLMHook(target_recall=...)`` — approximate decode-time retrieval
     at a MEASURED recall level; ``calibrate_k`` should match the hook's
     ``k`` (default 8 matches the hook default).
+
+    ``resident_bytes`` tiers the key table out-of-core (core/tiered.py):
+    cold key blocks live in host RAM under that device-cache budget, so
+    datastore capacity is bounded by host RAM instead of HBM;
+    ``prefetch_depth`` sets the fetch double-buffer depth
+    (docs/tiered_storage.md).
     """
+    from repro.core.tiered import resolve_prefetch_depth, resolve_resident_bytes
+    resident_bytes = resolve_resident_bytes(resident_bytes)
+    prefetch_depth = resolve_prefetch_depth(prefetch_depth)
     num, s = corpus_tokens.shape
     pos = np.arange(s, dtype=np.int32)[None, :].repeat(num, 0)
     if getattr(bundle.cfg, "mrope_section", None):
@@ -155,7 +196,9 @@ def build_datastore(bundle, params, corpus_tokens: np.ndarray, *,
         block_rows = autotune.lookup_block_rows(
             max(index.n, 1), 8, storage=index.storage)
     return Datastore(index=index, next_tokens=vals,
-                     hidden_dim=keys.shape[-1], block_rows=block_rows)
+                     hidden_dim=keys.shape[-1], block_rows=block_rows,
+                     resident_bytes=resident_bytes,
+                     prefetch_depth=prefetch_depth)
 
 
 @dataclasses.dataclass
@@ -225,7 +268,9 @@ class KNNLMHook:
             # inverts the store's calibration curve service-side — the two
             # are different quantities and must not be conflated.
             svc.register_tenant(name, self.store.index,
-                                p_guarantee=self.approx_p)
+                                p_guarantee=self.approx_p,
+                                resident_bytes=self.store.resident_bytes,
+                                prefetch_depth=self.store.prefetch_depth)
             self._svc_version = self.store.version
         resp = svc.search_sync(name, h, self.k, deadline_s=self.deadline_s,
                                target_recall=self.target_recall)
@@ -264,7 +309,7 @@ class KNNLMHook:
             # pool, so the jit cache holds at most `slots` programs per k).
             # Rare union overflows fall back to the capped sized retry.
             res, stats = bp_search.knn_batch(
-                self.store.index, h, self.k, budget=self.budget,
+                self.store.search_index(), h, self.k, budget=self.budget,
                 approx_p=self.approx_p, target_recall=self.target_recall,
                 block_rows=(self.block_rows or self.store.block_rows),
                 return_stats=True)

@@ -79,6 +79,7 @@ from repro.core import calibrate as breg_cal
 from repro.core import search as bp
 from repro.core.bregman import validate_rows
 from repro.core.segments import SegmentedForest
+from repro.core import tiered as tiered_store
 from repro.dist import knn as dist_knn
 from repro.launch import autotune
 
@@ -244,6 +245,10 @@ class Tenant:
     # registration (launch/autotune.py) so every launch for this tenant
     # reuses the same compiled program; None = DEFAULT_BLOCK_ROWS.
     block_rows: int | None = None
+    # Out-of-core residency (core/tiered.py): a TieredPointStore snapshot
+    # frozen at registration, used as the launch snapshot in place of
+    # _as_forest(index).  None = fully device-resident.
+    tiered: object = None
 
     @property
     def live_n(self) -> int:
@@ -335,7 +340,9 @@ class RetrievalService:
     def register_tenant(self, name: str, index, *, mesh=None, axis="data",
                         p_guarantee: float | None = None,
                         calibrate: bool = False,
-                        calibrate_k: int = 10) -> Tenant:
+                        calibrate_k: int = 10,
+                        resident_bytes: int | None = None,
+                        prefetch_depth: int | None = None) -> Tenant:
         """Admit an index into the registry, quarantining poisoned rows.
 
         With ``config.validate_index`` every live row is checked against
@@ -356,8 +363,21 @@ class RetrievalService:
         ``mesh`` shards the (validated) index point-major for
         ``distributed_knn`` launches; the sharded snapshot is FROZEN at
         registration — re-register after mutating to reshard.
+
+        ``resident_bytes`` tiers the tenant out-of-core (core/tiered.py):
+        cold point blocks live in host RAM behind that device-cache
+        budget and launches run against the TieredPointStore snapshot —
+        frozen at registration, exactly the sharding policy.
+        ``prefetch_depth`` sets its double-buffer depth.  Mutually
+        exclusive with ``mesh`` (a shard IS a residency decision).
         """
         bp.validate_p_guarantee(p_guarantee)
+        resident_bytes = tiered_store.resolve_resident_bytes(resident_bytes)
+        prefetch_depth = tiered_store.resolve_prefetch_depth(prefetch_depth)
+        if mesh is not None and resident_bytes is not None:
+            raise ValueError(
+                "resident_bytes and mesh are mutually exclusive: a sharded "
+                "tenant's residency is the shard layout")
         fam = index.family
         quarantined = np.empty((0,), np.int32)
         if self.config.validate_index:
@@ -382,6 +402,15 @@ class RetrievalService:
         block_rows = autotune.lookup_block_rows(
             max(live_n, 1), max(self.config.buckets),
             storage=getattr(index, "storage", None))
+        tiered = None
+        if resident_bytes is not None:
+            # Snapshot AFTER quarantine/calibration so the store serves
+            # the same clean live set as a resident launch would; a
+            # wedged fetch surfaces within one launch-timeout window.
+            tiered = tiered_store.TieredPointStore.from_index(
+                index, resident_bytes=resident_bytes,
+                prefetch_depth=prefetch_depth, block_rows=block_rows,
+                fetch_timeout_s=self.config.launch_timeout_s)
         tenant = Tenant(
             name=name, index=index, family=fam,
             family_name=index.family_name,
@@ -391,9 +420,74 @@ class RetrievalService:
             p_guarantee=(self.config.default_p_guarantee
                          if p_guarantee is None else float(p_guarantee)),
             degraded=quarantined.size > 0, quarantined=quarantined,
-            sharded=sharded, mesh=mesh, block_rows=block_rows)
+            sharded=sharded, mesh=mesh, block_rows=block_rows,
+            tiered=tiered)
         self.tenants[name] = tenant
         return tenant
+
+    def warm(self, tenant: str, shapes=None) -> dict:
+        """Pre-compile the launch programs a tenant's traffic will hit.
+
+        A cold first launch is dominated by jit compilation (~1s), which
+        both blows the first requests' deadlines AND teaches the launch
+        cost model that every launch costs a second — the ladder then
+        sheds healthy traffic (docs/serving_robustness.md).  Production
+        deployments warmed buckets by replaying synthetic requests
+        through ``search_sync``; this is that idiom as a first-class API,
+        minus the side effects: launches run DIRECTLY against the
+        tenant's snapshot, so no counters, breaker state, or cost-model
+        observations are touched.
+
+        ``shapes`` is an iterable of ``(q, k)`` pairs mirroring expected
+        traffic; each ``q`` is rounded up to its service bucket (the
+        shape real microbatches launch at) and both ladder entry tiers —
+        exact and §8 approx at the tenant's ``p_guarantee`` — are
+        compiled.  Default: every configured bucket at k=10.
+
+        For a tiered tenant (``resident_bytes``) this also pre-populates
+        the device-side block cache up to the residency budget
+        (``TieredPointStore.warm_cache``), so first queries pay neither
+        compilation nor host->device transfer.
+        """
+        t = self.tenants[tenant]
+        if shapes is None:
+            shapes = [(b, 10) for b in self.config.buckets]
+        snapshot = (t.tiered if t.tiered is not None
+                    else bp._as_forest(t.index))
+        # Ones-rows are inside every family's domain (the same reasoning
+        # as the index's inert fill), so synthetic warmup queries are
+        # domain-safe without sampling tenant data.
+        programs = []
+        for q, k in shapes:
+            q, k = int(q), int(k)
+            bucket = next((b for b in self.config.buckets if b >= q), q)
+            if (bucket, k) in programs:
+                continue
+            programs.append((bucket, k))
+            ys = np.ones((bucket, snapshot.d), np.float32)
+            budget = bp.default_budget(snapshot, k)
+            if t.sharded is not None:
+                # Sharded tenants launch distributed_knn, so warm THAT
+                # program, not the single-host pipeline.
+                for ap in (None, np.float32(t.p_guarantee)):
+                    res = dist_knn.distributed_knn(
+                        t.sharded, ys, family=t.family_name, k=k,
+                        budget=budget, block_rows=t.block_rows,
+                        approx_p=ap)
+                    jax.block_until_ready((res.ids, res.dists))
+                continue
+            res = bp.knn_search_batch(snapshot, ys, k, budget,
+                                      block_rows=t.block_rows,
+                                      validate=False)
+            jax.block_until_ready((res.ids, res.dists))
+            res = bp.knn_search_batch_approx(
+                snapshot, ys, k, budget, np.float32(t.p_guarantee),
+                block_rows=t.block_rows, validate=False)
+            jax.block_until_ready((res.ids, res.dists))
+        out = {"tenant": tenant, "programs": programs, "tiered": None}
+        if t.tiered is not None:
+            out["tiered"] = t.tiered.warm_cache()
+        return out
 
     # -- admission ----------------------------------------------------------
 
@@ -612,8 +706,11 @@ class RetrievalService:
 
         # Snapshot BEFORE any launch: background insert/delete/compact on
         # the mutable index (including fault-injected compactions) cannot
-        # perturb this microbatch's results.
-        snapshot = bp._as_forest(tenant.index)
+        # perturb this microbatch's results.  A tiered tenant launches
+        # against its (construction-time-frozen) TieredPointStore — same
+        # results bit-for-bit, cold rows fetched on envelope admission.
+        snapshot = (tenant.tiered if tenant.tiered is not None
+                    else bp._as_forest(tenant.index))
         k = reqs[0].k
         # Resolve the §8 shrink level from THIS tenant's snapshot: a
         # client target_recall inverts the index's measured calibration

@@ -15,6 +15,7 @@ from repro.core.segments import build_segmented_index
 from repro.serve.faults import (
     CompactDuringSearch,
     FaultPlan,
+    FetchStall,
     LatencySpike,
     LaunchError,
     PoisonQuery,
@@ -446,3 +447,76 @@ def test_validate_rows_mask_matches_family_domain():
     rows = np.array([[1.0, -2.0], [np.inf, 0.0]], np.float32)
     mask = validate_rows(fam, rows, mode="mask")
     assert mask.tolist() == [True, False]     # all-reals family: finite only
+
+
+# ---------------------------------------------------------------------------
+# Tiered tenants: warm() + FetchStall containment
+# ---------------------------------------------------------------------------
+
+def make_tiered_service(index, *, faults=None, **cfg):
+    """A service whose tenant's cold point blocks live in host RAM
+    (resident_bytes below the ~38 KB cold footprint at n=400, d=16)."""
+    clock = VirtualClock()
+    svc = RetrievalService(ServiceConfig(**cfg), clock=clock, faults=faults)
+    svc.register_tenant("t", index, resident_bytes=20_000)
+    return svc, clock
+
+
+def test_tiered_tenant_matches_oracle_and_warm_prefills(index, queries):
+    svc, _ = make_tiered_service(index)
+    store = svc.tenants["t"].tiered
+    assert store is not None and not store.is_resident
+
+    out = svc.warm("t", shapes=[(len(queries), K)])
+    assert len(out["programs"]) >= 1
+    assert out["tiered"]["blocks_cached"] > 0
+    assert svc.counters["submitted"] == 0      # warming is accounting-free
+
+    r = svc.search_sync("t", queries, K)
+    ref = oracle(index, queries)
+    assert r.quality == "exact"
+    np.testing.assert_array_equal(r.ids, np.asarray(ref.ids))
+
+
+def test_fetch_stall_within_timeout_rides_like_latency(index, queries):
+    """A slow (but not wedged) cold-block fetch delays the launch without
+    breaking results or labels."""
+    plan = FaultPlan([FetchStall(0.2, at_launches=0, tenant="t")], seed=11)
+    svc, _ = make_tiered_service(index, faults=plan)
+    r = svc.search_sync("t", queries, K)
+    assert len(plan.fired("fetch_stall")) == 1
+    assert r.quality == "exact" and r.latency_s >= 0.2
+    np.testing.assert_array_equal(r.ids, np.asarray(oracle(index, queries).ids))
+
+
+def test_fetch_stall_beyond_timeout_contained_by_retry(index, queries):
+    """A wedged fetch surfaces as FetchTimeout; the service charges the
+    full wait window, retries, and the retry (no longer stalled) serves
+    exact results — no hang, no wedged microbatch."""
+    plan = FaultPlan([FetchStall(10.0, at_launches=0, tenant="t")], seed=12)
+    svc, clock = make_tiered_service(index, faults=plan)
+    r = svc.search_sync("t", queries, K, deadline_s=20.0)
+    events = plan.fired("fetch_stall")
+    assert len(events) == 1 and "FetchTimeout" in events[0].detail
+    assert r.quality == "exact"                # retry succeeded, truthfully
+    assert svc.counters["launches"] >= 2       # failed launch + clean retry
+    assert r.latency_s >= 5.0                  # the timeout window was paid
+    np.testing.assert_array_equal(r.ids, np.asarray(oracle(index, queries).ids))
+
+
+def test_fetch_stall_noop_on_resident_tenant(index, queries):
+    """Fully-resident tenants have no fetch to stall: the fault never
+    fires and nothing slows down."""
+    plan = FaultPlan([FetchStall(10.0, tenant="t")], seed=13)
+    svc, _ = make_service(index, faults=plan)
+    assert svc.tenants["t"].tiered is None
+    r = svc.search_sync("t", queries, K)
+    assert not plan.fired("fetch_stall")
+    assert r.quality == "exact"
+
+
+def test_mesh_and_resident_bytes_are_mutually_exclusive(index):
+    svc, _ = make_service(index)
+    with pytest.raises(ValueError, match="resident_bytes"):
+        svc.register_tenant("x", make_index(seed=3), mesh=(1, 1),
+                            resident_bytes=20_000)

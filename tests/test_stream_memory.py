@@ -126,6 +126,37 @@ def test_peak_temp_bytes_bounded(compiled_stream):
     assert temp < 2 * N * Q
 
 
+def test_tiered_stage_a_never_materializes_cold_tiers():
+    """Tiered Stage A (filter + bounds + envelope gate over HOT tables)
+    compiles with NO n-sized allocation for the cold tiers.
+
+    The TieredPointStore keeps the (n, d) point table and the (n, m)
+    per-point corner tables cold (host numpy); Stage A's jit sees them
+    only as unused leaves of the hot forest and ``keep_unused=False``
+    prunes them, so at compile time the module must contain no (n, d)
+    instruction and nothing >= n * d elements.  The hot (n, M) filter
+    tables (n * M = 524288 elements here) remain, by design.
+    """
+    from repro.core import tiered
+
+    forest = _forest_spec()
+    ys = jax.ShapeDtypeStruct((Q, D), jnp.float32)
+    pg = jax.ShapeDtypeStruct((), jnp.float32)
+    compiled = tiered._stage_a_jit.lower(
+        forest, ys, K, BLOCK_ROWS, None, pg, False).compile()
+
+    nd = N * D
+    bad = [(instr.opcode, shape)
+           for instr, shape in _instr_shapes(compiled.as_text())
+           if shape == (N, D) or (int(np.prod(shape)) if shape else 1) >= nd]
+    assert not bad, f"cold-tier-sized allocations in Stage A: {bad[:5]}"
+
+    # the hot tables themselves do appear — the guard is not vacuous
+    hot_sized = [shape for _, shape in _instr_shapes(compiled.as_text())
+                 if shape and int(np.prod(shape)) >= N * M]
+    assert hot_sized, "no (n, M)-sized hot tables found — shapes changed?"
+
+
 def test_streamed_results_match_reference_at_compile_shape_small():
     """The compile-shape guard plus a small real-data parity anchor."""
     rng = np.random.default_rng(0)

@@ -14,6 +14,8 @@ approx_p          resolve_p_guarantee, validate_p_guarantee
 budget            resolve_budget, default_budget, fitted_budget,
                   fitted_budget_for_n
 deadline_s        resolve_deadline_s
+resident_bytes    resolve_resident_bytes
+prefetch_depth    resolve_prefetch_depth
 ================  =====================================================
 
 A function satisfies the contract for a knob parameter when it
@@ -49,6 +51,8 @@ KNOBS: dict[str, frozenset] = {
     "budget": frozenset({"resolve_budget", "default_budget",
                          "fitted_budget", "fitted_budget_for_n"}),
     "deadline_s": frozenset({"resolve_deadline_s"}),
+    "resident_bytes": frozenset({"resolve_resident_bytes"}),
+    "prefetch_depth": frozenset({"resolve_prefetch_depth"}),
 }
 
 _ALL_RESOLVERS = frozenset().union(*KNOBS.values())
